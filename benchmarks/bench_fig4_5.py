@@ -1,0 +1,58 @@
+"""Figures 4 + 5: per-template runtime breakdown and fraction of tuples
+
+scanned, HQI (m=0, m=10) vs PreFilter on the RelatedQS-shaped workload.
+Templates are ordered by selectivity (T1 most selective).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    HQIConfig, HQIIndex, PreFilterIndex, exhaustive_search, recall_at_k, tune_nprobe,
+)
+from repro.core.workload import kg_style
+
+from .common import D, N, Q, emit, timed
+
+
+def main():
+    kg = kg_style(n=N, d=D, queries_per_split=Q)
+    db, wl = kg.db, kg.splits[0]
+    truth = exhaustive_search(db, wl)
+    min_part = max(256, N // 64)
+
+    hqi0 = HQIIndex.build(db, wl, HQIConfig(m=0, min_partition_size=min_part, max_leaves=64))
+    hqi10 = HQIIndex.build(
+        db, wl, HQIConfig(m=10, n_coarse_centroids=32, min_partition_size=min_part, max_leaves=64)
+    )
+    pre = PreFilterIndex.build(db)
+
+    np_h0 = tune_nprobe(lambda w, np_: hqi0.search(w, nprobe=np_), wl, truth)
+    np_h10 = tune_nprobe(lambda w, np_: hqi10.search(w, nprobe=np_), wl, truth)
+    np_pre = tune_nprobe(lambda w, np_: pre.search(w, nprobe=np_), wl, truth)
+
+    order = np.argsort([kg.selectivities[t] for t in range(len(wl.templates))])
+    t1_time = None
+    for rank, ti in enumerate(order):
+        qidx = wl.queries_for_template(int(ti))
+        if len(qidx) == 0:
+            continue
+        sub = wl.subset(qidx)
+        sub_truth_ids = truth.ids[qidx]
+        for label, idx, np_t in (
+            ("hqi_m0", hqi0, np_h0), ("hqi_m10", hqi10, np_h10), ("prefilter", pre, np_pre),
+        ):
+            fn = (lambda: idx.search(sub, nprobe={0: np_t[int(ti)]}))
+            t = timed(fn)
+            res = fn()
+            frac = res.tuples_scanned / (db.n * sub.m)
+            if t1_time is None:
+                t1_time = t
+            emit(
+                f"fig4_5.T{rank+1}.{label}", t / sub.m * 1e6,
+                f"norm_t={t/t1_time:.2f},scan_frac={frac:.4f},sel={kg.selectivities[int(ti)]:.5f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Figure 7: batching microbenchmarks.
+
+7a — batch size sweep: HQI (with/without vector batching) vs PreFilter on a
+     mid-selectivity template; shows the crossover the paper discusses.
+7b — runtime vs recall (nprobe sweep) on attribute-free vectors: vector-
+     similarity batching vs per-query IVF.
+7c — attribute-constraint batching vs selectivity: batched bitmaps vs
+     one-at-a-time filter evaluation (the ~orders-of-magnitude gap).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    HQIConfig, HQIIndex, PreFilterIndex, exhaustive_search, recall_at_k, tune_nprobe,
+)
+from repro.core.ivf import IVFIndex
+from repro.core.planner import batch_search_ivf
+from repro.core.types import Workload
+from repro.core.workload import kg_style, synthetic_bigann_style
+
+from .common import D, FAST, N, Q, emit, timed
+
+
+def fig7a():
+    kg = kg_style(n=N, d=D, queries_per_split=max(Q, 512))
+    db, wl = kg.db, kg.splits[0]
+    truth = exhaustive_search(db, wl)
+    hqi = HQIIndex.build(db, wl, HQIConfig(min_partition_size=max(256, N // 64), max_leaves=64))
+    pre = PreFilterIndex.build(db)
+    ti = 3  # T4: mid selectivity (the paper's pick)
+    qidx = wl.queries_for_template(ti)
+    np_h = tune_nprobe(lambda w, np_: hqi.search(w, nprobe=np_), wl, truth)[ti]
+    np_p = tune_nprobe(lambda w, np_: pre.search(w, nprobe=np_), wl, truth)[ti]
+    base = None
+    for bs in (1, 10, 100, 1000):
+        if bs > len(qidx):
+            break
+        sub = wl.subset(qidx[:bs])
+        t_bv = timed(lambda: hqi.search(sub, nprobe={0: np_h}))
+        t_nv = timed(lambda: hqi.search(sub, nprobe={0: np_h}, batch_vec=False))
+        t_pre = timed(lambda: pre.search(sub, nprobe={0: np_p}))
+        if base is None:
+            base = t_nv
+        emit(f"fig7a.bs{bs}.hqi_vecbatch", t_bv * 1e6, f"norm={t_bv/base:.2f}")
+        emit(f"fig7a.bs{bs}.hqi_novecbatch", t_nv * 1e6, f"norm={t_nv/base:.2f}")
+        emit(f"fig7a.bs{bs}.prefilter", t_pre * 1e6, f"norm={t_pre/base:.2f}")
+
+
+def fig7b():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(N, D)).astype(np.float32)
+    ivf = IVFIndex.build(vecs, metric="l2")
+    m = max(100, Q // 4)
+    q = rng.normal(size=(m, D)).astype(np.float32)
+    # ground truth
+    ip = q @ vecs.T
+    sc = 2 * ip - (vecs**2).sum(1)[None, :] - (q**2).sum(1)[:, None]
+    truth_ids = np.argsort(-sc, axis=1)[:, :10]
+    for nprobe in (1, 2, 4, 8, 16, 32):
+        bs, bi = batch_search_ivf(ivf, q, nprobe=nprobe, k=10)
+        rec = np.mean([
+            len(set(bi[i].tolist()) & set(truth_ids[i].tolist())) / 10 for i in range(m)
+        ])
+        t_b = timed(lambda: batch_search_ivf(ivf, q, nprobe=nprobe, k=10))
+        t_s = timed(lambda: [ivf.search_single(q[i], nprobe=nprobe, k=10) for i in range(m)])
+        emit(f"fig7b.nprobe{nprobe}.vecbatch", t_b / m * 1e6, f"recall={rec:.2f}")
+        emit(f"fig7b.nprobe{nprobe}.perquery", t_s / m * 1e6,
+             f"recall={rec:.2f},slowdown={t_s/t_b:.1f}x")
+
+
+def fig7c():
+    db, wl, sel = synthetic_bigann_style(n=N, d=D, n_query_vecs=max(10, Q // 20), seed=2)
+    pre = PreFilterIndex.build(db)
+    for ti in (0, 3, 6, 9):  # selectivities 1, 2^-3, 2^-6, 2^-9
+        qidx = wl.queries_for_template(ti)[: 50 if FAST else 200]
+        sub = wl.subset(qidx)
+        t_batched = timed(lambda: pre.search(sub, nprobe=8, batch_attr=True))
+        t_one = timed(lambda: pre.search(sub, nprobe=8, batch_attr=False))
+        t_vec = timed(lambda: pre.search(sub, nprobe=8, batch_attr=True, batch_vec=True))
+        emit(f"fig7c.sel{sel[ti]:.4f}.attr_batched", t_batched / sub.m * 1e6, "")
+        emit(f"fig7c.sel{sel[ti]:.4f}.one_at_a_time", t_one / sub.m * 1e6,
+             f"slowdown={t_one/t_batched:.1f}x")
+        emit(f"fig7c.sel{sel[ti]:.4f}.attr_plus_vec", t_vec / sub.m * 1e6,
+             f"vs_one={t_one/t_vec:.1f}x")
+
+
+def main():
+    fig7a()
+    fig7b()
+    fig7c()
+
+
+if __name__ == "__main__":
+    main()

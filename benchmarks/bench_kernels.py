@@ -1,0 +1,54 @@
+"""Kernel-level microbench: the fused masked-KNN work-unit throughput
+
+(CPU wall-clock of the jnp path; the Pallas path is TPU-targeted and runs
+interpret-mode for correctness only) + roofline-derived intensity figures.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+from .common import emit, timed
+
+
+def pq_bench():
+    from repro.core.pq import PQIndex
+
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(50_000, 64)).astype(np.float32)
+    idx = PQIndex.build(vecs, m=8)
+    q = rng.normal(size=(64, 64)).astype(np.float32)
+
+    t = timed(lambda: idx.search(q, k=10), warmup=1, iters=2)
+    emit("kernel.pq_adc_scan.n50k_m8", t / 64 * 1e6,
+         f"compression={idx.compression_ratio:.0f}x")
+    t2 = timed(lambda: idx.search(q, k=10, rerank=8), warmup=1, iters=2)
+    emit("kernel.pq_adc_rerank8.n50k_m8", t2 / 64 * 1e6, "")
+
+
+def main():
+    pq_bench()
+    rng = np.random.default_rng(0)
+    for (w, tq, tv, d, k) in [(8, 64, 256, 64, 10), (32, 64, 512, 128, 10)]:
+        q = jnp.asarray(rng.normal(size=(w, tq, d)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(w, tv, d)).astype(np.float32))
+        valid = jnp.asarray(rng.random((w, tv)) > 0.3)
+
+        def call():
+            s, i = ops.batched_masked_topk(q, v, valid, k, metric="ip", use_pallas=False)
+            jax.block_until_ready(s)
+
+        t = timed(call, warmup=2, iters=3)
+        flops = 2 * w * tq * tv * d
+        ai = flops / (4 * w * (tq * d + tv * d + tq * k * 2))  # arithmetic intensity
+        emit(
+            f"kernel.masked_topk.w{w}q{tq}v{tv}d{d}", t * 1e6,
+            f"gflops={flops/t/1e9:.1f},intensity={ai:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Shared benchmark scaffolding.
+
+Scale knobs via env (laptop-scale defaults; the paper runs 100M vectors):
+    REPRO_BENCH_N        database size            (default 100_000)
+    REPRO_BENCH_D        vector dims              (default 64)
+    REPRO_BENCH_Q        queries per split        (default 2_000)
+    REPRO_BENCH_FAST=1   tiny sizes for CI smoke
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows; "derived" holds
+the paper-comparable figure (speedup ×, recall, tuples-scanned fraction, …).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+FAST = os.environ.get("REPRO_BENCH_FAST", "0") == "1"
+N = int(os.environ.get("REPRO_BENCH_N", "20000" if FAST else "100000"))
+D = int(os.environ.get("REPRO_BENCH_D", "16" if FAST else "64"))
+Q = int(os.environ.get("REPRO_BENCH_Q", "300" if FAST else "2000"))
+
+_ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn: Callable, *, warmup: int = 1, iters: int = 1) -> float:
+    """Seconds per call (median of iters after warmup)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def rows():
+    return list(_ROWS)

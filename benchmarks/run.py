@@ -1,0 +1,30 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table3_4   # one asset
+    REPRO_BENCH_FAST=1 ...                             # CI-speed smoke
+
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py).
+"""
+import sys
+
+
+def main() -> None:
+    from . import bench_fig4_5, bench_fig6, bench_fig7, bench_kernels, bench_table3_4, bench_table5
+
+    suites = {
+        "table3_4": bench_table3_4.main,
+        "table5": bench_table5.main,
+        "fig4_5": bench_fig4_5.main,
+        "fig6": bench_fig6.main,
+        "fig7": bench_fig7.main,
+        "kernels": bench_kernels.main,
+    }
+    picks = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for p in picks:
+        suites[p]()
+
+
+if __name__ == '__main__':
+    main()

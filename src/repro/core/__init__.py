@@ -1,0 +1,39 @@
+"""HQI core — the paper's contribution (workload-aware hybrid vector search).
+
+Public API:
+    VectorDatabase, Column, Workload, HybridQuery, SearchResult
+    predicates: Cmp, Between, In, Contains, NotNull, CentroidIn, make_filter
+    HQIIndex / HQIConfig — workload-aware index + Algorithm-3 batch search
+    baselines: exhaustive_search, PreFilterIndex, PostFilterIndex, RangeIndex
+    metrics: recall_at_k, tune_nprobe
+"""
+from .types import (  # noqa: F401
+    Column,
+    HybridQuery,
+    METRIC_IP,
+    METRIC_L2,
+    SearchResult,
+    VectorDatabase,
+    Workload,
+)
+from .predicates import (  # noqa: F401
+    Between,
+    CentroidIn,
+    Cmp,
+    Contains,
+    In,
+    NotNull,
+    evaluate_filter,
+    make_filter,
+)
+from .qdtree import QDTree, build_qdtree  # noqa: F401
+from .ivf import IVFIndex, ScanStats  # noqa: F401
+from .hqi import HQIConfig, HQIIndex  # noqa: F401
+from .baselines import (  # noqa: F401
+    PostFilterIndex,
+    PreFilterIndex,
+    RangeIndex,
+    exhaustive_search,
+)
+from .metrics import per_template_recall, recall_at_k, tune_nprobe  # noqa: F401
+from .workload import kg_style, lp_style, synthetic_bigann_style  # noqa: F401

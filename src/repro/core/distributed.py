@@ -1,0 +1,118 @@
+"""Distributed batch hybrid search on the production mesh (shard_map).
+
+Mapping of HQI onto the (pod, data, model) mesh:
+
+  * the packed vector index (qd-tree partitions → contiguous posting lists)
+    is sharded over the **model** axis — each model-rank owns a slice of the
+    database rows and its bitmap slice;
+  * the query stream is sharded over **data** (and **pod**) — batch
+    parallelism, queries never need to see each other;
+  * each device computes the masked top-k of its queries against its DB
+    shard (one fused kernel call — Alg. 3's matmul), then an
+    **all-gather over "model"** collects the per-shard top-k candidates
+    (k·|model| per query, NOT the full distance rows) and a static merge
+    selects the global top-k.
+
+Communication per query is O(k · model_axis) — independent of DB size; the
+index is read-only so pods replicate it and split the stream (linear scaling
+across pods). This step is a first-class dry-run/roofline row ("hqi-search").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import ref as kref
+
+from ..distributed.sharding import shard_map_compat
+
+
+def _batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def chunked_masked_topk(queries, db, bitmap, k: int, metric: str, tile: int = 16_384):
+    """Running top-k over DB tiles — the jnp mirror of the fused Pallas
+
+    kernel's schedule: the M×N score matrix is never materialized (peak
+    O(M × tile)), HBM traffic is one DB read + O(M·k) instead of O(M·N)
+    score spills. §Perf iteration for the hqi-search cells."""
+    n = db.shape[0]
+    if n <= tile:
+        return kref.masked_topk_ref(queries, db, bitmap, k, metric)
+    nt = (n + tile - 1) // tile
+    npad = nt * tile
+    dbp = jnp.pad(db, ((0, npad - n), (0, 0)))
+    bmp = jnp.pad(bitmap, (0, npad - n))
+    m = queries.shape[0]
+
+    def step(carry, inp):
+        rs, ri = carry
+        dtile, btile, off = inp
+        s, i = kref.masked_topk_ref(queries, dtile, btile, k, metric)
+        gi = jnp.where(i >= 0, i + off, -1)
+        cat_s = jnp.concatenate([rs, s], axis=1)
+        cat_i = jnp.concatenate([ri, gi], axis=1)
+        top, pos = jax.lax.top_k(cat_s, k)
+        return (top, jnp.take_along_axis(cat_i, pos, axis=1)), None
+
+    init = (
+        jnp.full((m, k), kref.NEG_INF, jnp.float32),
+        jnp.full((m, k), -1, jnp.int32),
+    )
+    tiles = dbp.reshape(nt, tile, -1)
+    bts = bmp.reshape(nt, tile)
+    offs = jnp.arange(nt, dtype=jnp.int32) * tile
+    (rs, ri), _ = jax.lax.scan(step, init, (tiles, bts, offs))
+    ri = jnp.where(jnp.isfinite(rs) & (rs > kref.NEG_INF / 2), ri, -1)
+    return rs, ri
+
+
+def make_search_step(mesh: Mesh, *, k: int, metric: str = "ip", db_tile: int = 16_384):
+    """Returns jit'd search_step(db, norms, bitmap, queries) -> (scores, ids).
+
+    db      f32 [N, d]    sharded P("model", None)   — packed index shard
+    bitmap  bool [N]      sharded P("model")         — pushdown bitmap
+    queries f32 [M, d]    sharded P(batch_axes, None)
+    out     [M, k] scores / global ids.
+    """
+    baxes = _batch_axes(mesh)
+
+    def local(db, bitmap, queries):
+        # per-device shapes: db [N/mp, d], bitmap [N/mp], queries [M/dp, d]
+        n_local = db.shape[0]
+        shard_idx = jax.lax.axis_index("model")
+        scores, idx = chunked_masked_topk(queries, db, bitmap, k, metric, tile=db_tile)
+        gids = jnp.where(idx >= 0, idx + shard_idx * n_local, -1)
+        # collect candidates from every model shard: [mp, M/dp, k]
+        all_s = jax.lax.all_gather(scores, "model")
+        all_i = jax.lax.all_gather(gids, "model")
+        mshards = all_s.shape[0]
+        cat_s = jnp.moveaxis(all_s, 0, 1).reshape(queries.shape[0], mshards * k)
+        cat_i = jnp.moveaxis(all_i, 0, 1).reshape(queries.shape[0], mshards * k)
+        top_s, pos = jax.lax.top_k(cat_s, k)
+        top_i = jnp.take_along_axis(cat_i, pos, axis=1)
+        return top_s, top_i
+
+    fn = shard_map_compat(
+        local,
+        mesh=mesh,
+        in_specs=(P("model", None), P("model"), P(baxes, None)),
+        out_specs=(P(baxes, None), P(baxes, None)),
+    )
+    return jax.jit(fn)
+
+
+def search_step_specs(mesh: Mesh, *, n: int, d: int, m: int):
+    """ShapeDtypeStructs with shardings for the dry-run."""
+    baxes = _batch_axes(mesh)
+    sh = lambda spec: NamedSharding(mesh, spec)
+    return (
+        jax.ShapeDtypeStruct((n, d), jnp.float32, sharding=sh(P("model", None))),
+        jax.ShapeDtypeStruct((n,), jnp.bool_, sharding=sh(P("model"))),
+        jax.ShapeDtypeStruct((m, d), jnp.float32, sharding=sh(P(baxes, None))),
+    )

@@ -1,0 +1,254 @@
+"""HQI — the paper's hybrid query index (Sections 4 + 5, end to end).
+
+Build:  coarse k-means (m > 0 mode) → balanced qd-tree over attribute +
+centroid cut predicates → one IVF index per leaf partition (√|Pᵢ| lists).
+
+Batch search (Algorithm 3 across partitions):
+  group by template → route template×partition via semantic descriptions
+  (+ per-query centroid routing when m > 0) → per (partition, template):
+  bitmap pushdown + planner work units (one matmul per posting-list group)
+  → per-query merge across partitions.
+
+Online search: same routing, per-query IVF scans (used standalone — the
+"workload-aware index only" configuration of Section 6.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from . import kmeans as km
+from .ivf import IVFIndex, ScanStats
+from .planner import PlanConfig, batch_search_ivf
+from .predicates import evaluate_filter
+from .qdtree import QDTree, build_qdtree
+from .types import SearchResult, VectorDatabase, Workload
+
+
+@dataclasses.dataclass
+class HQIConfig:
+    m: int = 0  # query-to-centroid fan-out of Section 4.1.1 (0 = attrs only)
+    n_coarse_centroids: int = 64  # coarse clustering for partitioning (m > 0)
+    min_partition_size: int = 4096
+    max_leaves: int = 1024
+    ivf_centroids: Optional[int] = None  # default sqrt(|Pi|)
+    kmeans_iters: int = 8
+    cost_mode: str = "tuples"
+    seed: int = 0
+    plan: PlanConfig = dataclasses.field(default_factory=PlanConfig)
+
+
+@dataclasses.dataclass
+class Partition:
+    rows: np.ndarray  # global tuple indices, aligned with ivf local order
+    ivf: IVFIndex
+
+
+@dataclasses.dataclass
+class BuildInfo:
+    qdtree_seconds: float = 0.0
+    ivf_seconds: float = 0.0
+    coarse_seconds: float = 0.0
+
+    @property
+    def total_seconds(self) -> float:
+        return self.qdtree_seconds + self.ivf_seconds + self.coarse_seconds
+
+
+class HQIIndex:
+    def __init__(
+        self,
+        db: VectorDatabase,
+        tree: QDTree,
+        partitions: List[Partition],
+        cfg: HQIConfig,
+        coarse_centroids: Optional[np.ndarray],
+        build_info: BuildInfo,
+    ):
+        self.db = db
+        self.tree = tree
+        self.partitions = partitions
+        self.cfg = cfg
+        self.coarse_centroids = coarse_centroids
+        self.build_info = build_info
+        self._bitmap_cache: Dict[tuple, np.ndarray] = {}
+
+    # ------------------------------------------------------------------ build
+
+    @staticmethod
+    def build(db: VectorDatabase, workload_sample: Workload, cfg: HQIConfig = HQIConfig()) -> "HQIIndex":
+        info = BuildInfo()
+        centroid_of = None
+        query_centroids = None
+        coarse = None
+        if cfg.m > 0:
+            t0 = time.perf_counter()
+            coarse = km.train_kmeans(
+                db.vectors, cfg.n_coarse_centroids, iters=cfg.kmeans_iters, metric=db.metric, seed=cfg.seed
+            )
+            centroid_of = km.assign_kmeans(db.vectors, coarse, metric=db.metric)
+            query_centroids = km.topm_centroids(
+                workload_sample.vectors, coarse, cfg.m, metric=db.metric
+            )
+            info.coarse_seconds = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        tree = build_qdtree(
+            db,
+            workload_sample,
+            centroid_of=centroid_of,
+            query_centroids=query_centroids,
+            n_centroids=cfg.n_coarse_centroids if cfg.m > 0 else 0,
+            min_size=cfg.min_partition_size,
+            max_leaves=cfg.max_leaves,
+            cost_mode=cfg.cost_mode,
+        )
+        info.qdtree_seconds = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        partitions = []
+        for leaf in tree.leaves:
+            vecs = db.vectors[leaf.rows]
+            nc = cfg.ivf_centroids or max(1, int(math.isqrt(len(leaf.rows))))
+            ivf = IVFIndex.build(
+                vecs, metric=db.metric, n_centroids=nc, kmeans_iters=cfg.kmeans_iters, seed=cfg.seed
+            )
+            partitions.append(Partition(rows=leaf.rows, ivf=ivf))
+        info.ivf_seconds = time.perf_counter() - t0
+        return HQIIndex(db, tree, partitions, cfg, coarse, info)
+
+    # ----------------------------------------------------------------- common
+
+    def template_bitmap(self, filt: tuple) -> np.ndarray:
+        if filt not in self._bitmap_cache:
+            self._bitmap_cache[filt] = evaluate_filter(filt, self.db)
+        return self._bitmap_cache[filt]
+
+    def clear_bitmap_cache(self):
+        self._bitmap_cache.clear()
+
+    def _routing(self, workload: Workload) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """(template_routes bool [T, L], query_centroid_ok bool [m, L] | None)."""
+        troutes = np.stack([self.tree.route_filter(t) for t in workload.templates])
+        qcent_ok = None
+        if self.cfg.m > 0 and self.coarse_centroids is not None:
+            allowed = self.tree.centroid_allowed()  # [L, nc]
+            qc = km.topm_centroids(
+                workload.vectors, self.coarse_centroids, self.cfg.m, metric=self.db.metric
+            )  # [m, mfan]
+            # query ok in leaf iff any of its m centroids is allowed there
+            onehot = np.zeros((workload.m, allowed.shape[1]), dtype=bool)
+            rows = np.repeat(np.arange(workload.m), qc.shape[1])
+            onehot[rows, qc.reshape(-1)] = True
+            qcent_ok = (onehot @ allowed.T.astype(np.int64)) > 0  # [m, L]
+        return troutes, qcent_ok
+
+    # ------------------------------------------------------------ batch search
+
+    def search(
+        self,
+        workload: Workload,
+        *,
+        nprobe: Union[int, Dict[int, int]] = 8,
+        batch_vec: Union[bool, str] = True,
+    ) -> SearchResult:
+        """Batch HVQ processing (Algorithm 3 over the qd-tree partitions).
+
+        batch_vec: True = always share posting-list matmuls; False = per-query
+        scans; "auto" = the adaptive executor the paper's §6.5 calls for —
+        batch a (template × partition) group only when it is large enough to
+        amortize the work-unit padding (PlanConfig.adaptive_crossover).
+        """
+        m, k = workload.m, workload.k
+        stats = ScanStats()
+        troutes, qcent_ok = self._routing(workload)
+
+        run_s = np.full((m, k), -np.inf, dtype=np.float32)
+        run_i = np.full((m, k), -1, dtype=np.int64)
+
+        def merge(qidx, s_new, i_new):
+            cat_s = np.concatenate([run_s[qidx], s_new], axis=1)
+            cat_i = np.concatenate([run_i[qidx], i_new], axis=1)
+            part = np.argpartition(-cat_s, k - 1, axis=1)[:, :k]
+            s_sel = np.take_along_axis(cat_s, part, axis=1)
+            i_sel = np.take_along_axis(cat_i, part, axis=1)
+            ordr = np.argsort(-s_sel, axis=1, kind="stable")
+            run_s[qidx] = np.take_along_axis(s_sel, ordr, axis=1)
+            run_i[qidx] = np.take_along_axis(i_sel, ordr, axis=1)
+
+        for ti, filt in enumerate(workload.templates):
+            q_of_t = workload.queries_for_template(ti)
+            if len(q_of_t) == 0:
+                continue
+            bitmap = self.template_bitmap(filt)
+            np_t = nprobe[ti] if isinstance(nprobe, dict) else nprobe
+            for li in np.nonzero(troutes[ti])[0]:
+                part = self.partitions[li]
+                qidx = q_of_t
+                if qcent_ok is not None:
+                    qidx = q_of_t[qcent_ok[q_of_t, li]]
+                if len(qidx) == 0:
+                    continue
+                local_bitmap = bitmap[part.rows]
+                if not local_bitmap.any():
+                    continue
+                use_batch = (
+                    len(qidx) >= self.cfg.plan.adaptive_crossover
+                    if batch_vec == "auto"
+                    else bool(batch_vec)
+                )
+                if use_batch:
+                    s, loc = batch_search_ivf(
+                        part.ivf,
+                        workload.vectors[qidx],
+                        nprobe=np_t,
+                        k=k,
+                        bitmap=local_bitmap,
+                        stats=stats,
+                        cfg=self.cfg.plan,
+                    )
+                else:
+                    s = np.full((len(qidx), k), -np.inf, np.float32)
+                    loc = np.full((len(qidx), k), -1, np.int64)
+                    for r, qi in enumerate(qidx):
+                        s[r], loc[r] = part.ivf.search_single(
+                            workload.vectors[qi], nprobe=np_t, k=k, bitmap=local_bitmap, stats=stats
+                        )
+                gids = np.where(loc >= 0, part.rows[np.maximum(loc, 0)], -1)
+                merge(qidx, s, gids)
+
+        return SearchResult(ids=run_i, scores=run_s, tuples_scanned=stats.tuples_scanned)
+
+    # ------------------------------------------------------------ online search
+
+    def search_online(
+        self,
+        workload: Workload,
+        *,
+        nprobe: Union[int, Dict[int, int]] = 8,
+    ) -> SearchResult:
+        """One query at a time (workload-aware index w/o batching, Section 6.5)."""
+        return self.search(workload, nprobe=nprobe, batch_vec=False)
+
+    # ------------------------------------------------------------------ stats
+
+    def partition_sizes(self) -> np.ndarray:
+        return np.array([len(p.rows) for p in self.partitions])
+
+    def tuples_routed(self, workload: Workload) -> int:
+        """Σ over (query, routed partition) of |partition| — the Eq.(1) cost."""
+        troutes, qcent_ok = self._routing(workload)
+        sizes = self.partition_sizes()
+        total = 0
+        for ti in range(len(workload.templates)):
+            q_of_t = workload.queries_for_template(ti)
+            for li in np.nonzero(troutes[ti])[0]:
+                cnt = len(q_of_t)
+                if qcent_ok is not None:
+                    cnt = int(qcent_ok[q_of_t, li].sum())
+                total += cnt * int(sizes[li])
+        return total

@@ -1,0 +1,72 @@
+"""Evaluation metrics + nprobe tuning (Section 6.1's protocol).
+
+recall@k against exhaustive ground truth; per-template nprobe tuned (doubling
+search) until the target recall is reached — the paper tunes nprobe per query
+template for Recall ≥ 0.8 at k = 10.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from .types import SearchResult, Workload
+
+
+def recall_at_k(result: SearchResult, truth: SearchResult) -> float:
+    """Fraction of ground-truth ids retrieved (averaged over queries)."""
+    m, k = truth.ids.shape
+    hits = 0
+    total = 0
+    for i in range(m):
+        t = set(int(x) for x in truth.ids[i] if x >= 0)
+        if not t:
+            continue
+        r = set(int(x) for x in result.ids[i] if x >= 0)
+        hits += len(t & r)
+        total += len(t)
+    return hits / max(total, 1)
+
+
+def per_template_recall(result: SearchResult, truth: SearchResult, workload: Workload) -> Dict[int, float]:
+    out = {}
+    for ti in range(len(workload.templates)):
+        qidx = workload.queries_for_template(ti)
+        if len(qidx) == 0:
+            continue
+        sub_r = SearchResult(ids=result.ids[qidx], scores=result.scores[qidx])
+        sub_t = SearchResult(ids=truth.ids[qidx], scores=truth.scores[qidx])
+        out[ti] = recall_at_k(sub_r, sub_t)
+    return out
+
+
+def tune_nprobe(
+    search_fn: Callable[[Workload, Dict[int, int]], SearchResult],
+    workload: Workload,
+    truth: SearchResult,
+    *,
+    target_recall: float = 0.8,
+    max_nprobe: int = 256,
+    sample_per_template: int = 64,
+    seed: int = 0,
+) -> Dict[int, int]:
+    """Per-template nprobe via doubling search on a query sample."""
+    rng = np.random.default_rng(seed)
+    nprobe: Dict[int, int] = {}
+    for ti in range(len(workload.templates)):
+        qidx = workload.queries_for_template(ti)
+        if len(qidx) == 0:
+            nprobe[ti] = 1
+            continue
+        if len(qidx) > sample_per_template:
+            qidx = rng.choice(qidx, size=sample_per_template, replace=False)
+        sub = workload.subset(qidx)
+        sub_truth = SearchResult(ids=truth.ids[qidx], scores=truth.scores[qidx])
+        np_t = 1
+        while np_t <= max_nprobe:
+            res = search_fn(sub, {0: np_t})
+            if recall_at_k(res, sub_truth) >= target_recall:
+                break
+            np_t *= 2
+        nprobe[ti] = min(np_t, max_nprobe)
+    return nprobe

@@ -1,0 +1,166 @@
+"""Batch execution planner — the host side of Algorithm 3.
+
+Given a group of queries (already grouped by attribute template — Alg. 3
+line 5) and an IVF index, the planner:
+
+  1. finds nprobe posting lists per query (line 6, one batched matmul),
+  2. inverts the (query → lists) map into per-list query groups (line 8),
+  3. packs (query-chunk × posting-list) pairs into fixed-shape *work units*
+     bucketed by padded list length (static shapes for XLA/Pallas),
+  4. executes all units of a bucket in one ``batched_masked_topk`` call —
+     the single-matmul-per-posting-list of Alg. 3 line 10, fused with the
+     Section 4.2 bitmap pushdown,
+  5. scatters per-unit top-k back to a [m, nprobe, k] tensor and reduces it
+     to the final per-query top-k (line 12's heap, as one top-k op).
+
+Every (query, posting-list) pair is evaluated exactly once and each vector
+lives in exactly one list, so results are identical to the per-query scan —
+tests assert bit-equality of the candidate sets.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .ivf import IVFIndex, ScanStats
+
+
+def _next_pow2(x: int, lo: int = 32) -> int:
+    return max(lo, 1 << (max(1, x - 1)).bit_length())
+
+
+@dataclasses.dataclass
+class PlanConfig:
+    tq_unit: int = 64  # queries per work unit
+    min_list_pad: int = 32  # smallest padded list bucket
+    use_pallas: Optional[bool] = None  # None = ops default
+    interpret: Optional[bool] = None
+    # adaptive executor (paper §6.5): below this group size the per-query
+    # scan beats batched matmuls (Fig. 7a's crossover ≈ 100 at paper scale)
+    adaptive_crossover: int = 64
+
+
+def batch_search_ivf(
+    ivf: IVFIndex,
+    q_vecs: np.ndarray,  # [m, d] — one template group
+    *,
+    nprobe: int,
+    k: int,
+    bitmap: Optional[np.ndarray] = None,  # bool [n] in LOCAL vector order
+    stats: Optional[ScanStats] = None,
+    cfg: PlanConfig = PlanConfig(),
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (scores f32 [m, k] best-first, local idx int64 [m, k]; -1 pad)."""
+    m = q_vecs.shape[0]
+    if m == 0:
+        return np.zeros((0, k), np.float32), np.zeros((0, k), np.int64)
+    nprobe = int(min(nprobe, ivf.n_lists))
+    probes = ivf.probe(q_vecs, nprobe)  # [m, nprobe]
+
+    # bitmap in packed order (posting-list entries are contiguous slices)
+    packed_bitmap = None
+    if bitmap is not None:
+        packed_bitmap = bitmap[ivf.order]
+
+    # ---- invert (query, slot) -> list groups --------------------------------
+    flat_list = probes.reshape(-1)  # [m * nprobe]
+    flat_q = np.repeat(np.arange(m, dtype=np.int64), nprobe)
+    flat_slot = np.tile(np.arange(nprobe, dtype=np.int64), m)
+    sort = np.argsort(flat_list, kind="stable")
+    flat_list, flat_q, flat_slot = flat_list[sort], flat_q[sort], flat_slot[sort]
+    uniq_lists, group_starts = np.unique(flat_list, return_index=True)
+    group_ends = np.append(group_starts[1:], len(flat_list))
+
+    # ---- build work units, bucketed by padded list length -------------------
+    buckets: Dict[Tuple[int, int], List[Tuple[int, np.ndarray, np.ndarray]]] = {}
+    tq = cfg.tq_unit
+    for l, gs, ge in zip(uniq_lists, group_starts, group_ends):
+        llen = ivf.list_len(int(l))
+        if llen == 0:
+            continue
+        lp = _next_pow2(llen, cfg.min_list_pad)
+        qs, slots = flat_q[gs:ge], flat_slot[gs:ge]
+        if stats is not None:
+            stats.tuples_scanned += llen * len(qs)
+            if packed_bitmap is not None:
+                s0 = int(ivf.offsets[l])
+                stats.dists_computed += int(packed_bitmap[s0 : s0 + llen].sum()) * len(qs)
+            else:
+                stats.dists_computed += llen * len(qs)
+        for cs in range(0, len(qs), tq):
+            buckets.setdefault((lp, tq), []).append((int(l), qs[cs : cs + tq], slots[cs : cs + tq]))
+
+    out_scores = np.full((m, nprobe, k), -np.inf, dtype=np.float32)
+    out_idx = np.full((m, nprobe, k), -1, dtype=np.int64)
+
+    n_packed = ivf.n
+    for (lp, _tq), units in buckets.items():
+        W = len(units)
+        Q = np.zeros((W, tq, q_vecs.shape[1]), dtype=np.float32)
+        Vidx = np.zeros((W, lp), dtype=np.int64)
+        valid = np.zeros((W, lp), dtype=bool)
+        qrow_of = np.full((W, tq), -1, dtype=np.int64)
+        slot_of = np.zeros((W, tq), dtype=np.int64)
+        for w, (l, qs, slots) in enumerate(units):
+            s0, e0 = int(ivf.offsets[l]), int(ivf.offsets[l + 1])
+            llen = e0 - s0
+            rows = np.arange(lp) + s0
+            rows = np.minimum(rows, n_packed - 1)
+            Vidx[w] = rows
+            v_ok = np.arange(lp) < llen
+            if packed_bitmap is not None:
+                v_ok = v_ok & packed_bitmap[rows]
+            valid[w] = v_ok
+            Q[w, : len(qs)] = q_vecs[qs]
+            qrow_of[w, : len(qs)] = qs
+            slot_of[w, : len(qs)] = slots
+        V = ivf.packed[Vidx]  # [W, lp, d]
+        s, i_loc = kops.batched_masked_topk(
+            jnp.asarray(Q),
+            jnp.asarray(V),
+            jnp.asarray(valid),
+            min(k, lp),
+            metric=ivf.metric,
+            use_pallas=cfg.use_pallas,
+            interpret=cfg.interpret,
+        )
+        s = np.asarray(s)
+        i_loc = np.asarray(i_loc)  # index within the unit's lp rows (-1 = none)
+        kk = s.shape[-1]
+        # local packed row -> local vector index
+        packed_rows = np.take_along_axis(
+            np.broadcast_to(Vidx[:, None, :], i_loc.shape[:2] + (lp,)),
+            np.maximum(i_loc, 0),
+            axis=2,
+        )
+        gidx = ivf.order[packed_rows]
+        gidx = np.where(i_loc < 0, -1, gidx)
+        # scatter to [m, nprobe, k]
+        wmask = qrow_of >= 0  # [W, tq]
+        qr = qrow_of[wmask]
+        sl = slot_of[wmask]
+        out_scores[qr, sl, :kk] = s[wmask]
+        out_idx[qr, sl, :kk] = gidx[wmask]
+
+    # ---- final per-query merge (Alg. 3 line 12) -----------------------------
+    flat_s = out_scores.reshape(m, -1)
+    flat_i = out_idx.reshape(m, -1)
+    kk = min(k, flat_s.shape[1])
+    part = np.argpartition(-flat_s, kk - 1, axis=1)[:, :kk]
+    top_s = np.take_along_axis(flat_s, part, axis=1)
+    top_i = np.take_along_axis(flat_i, part, axis=1)
+    ordr = np.argsort(-top_s, axis=1, kind="stable")
+    top_s = np.take_along_axis(top_s, ordr, axis=1)
+    top_i = np.take_along_axis(top_i, ordr, axis=1)
+    if kk < k:
+        top_s = np.pad(top_s, ((0, 0), (0, k - kk)), constant_values=-np.inf)
+        top_i = np.pad(top_i, ((0, 0), (0, k - kk)), constant_values=-1)
+    # normalize sentinels: absent results are (-inf, -1) on every path
+    top_s = np.where(top_i < 0, -np.inf, top_s)
+    return top_s.astype(np.float32), top_i.astype(np.int64)

@@ -1,0 +1,62 @@
+"""Gradient compression for the data-parallel all-reduce path.
+
+int8 uniform quantization with error feedback (EF-SGD style): each step
+quantizes (grad + residual), all-gathers the int8 payload over the data axis,
+dequantizes and averages locally, and carries the quantization error into the
+next step. 4× less DP traffic than fp32 (2× vs bf16) at the cost of an
+all-gather instead of an all-reduce (int8 summation would overflow and TPUs
+reduce in the wide type anyway).
+
+Used by the shard_map data-parallel training mode (train/fault_tolerance.py's
+``dp_train_step_compressed``) and unit-tested for unbiasedness under error
+feedback. The pjit path keeps XLA-native reductions.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q int8, scale f32 scalar)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads, residual):
+    """(grads + residual) -> (q_tree, scale_tree, new_residual)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        return q, s, x - deq
+
+    trees = jax.tree.map(one, grads, residual)
+    q = jax.tree.map(lambda t: t[0], trees, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], trees, is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[2], trees, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, res
+
+
+def allreduce_compressed(q_tree, s_tree, axis_name: str):
+    """All-gather int8 payloads across ``axis_name`` and average locally."""
+
+    def one(q, s):
+        qg = jax.lax.all_gather(q, axis_name)  # [N, ...] int8
+        sg = jax.lax.all_gather(s, axis_name)  # [N]
+        deq = qg.astype(jnp.float32) * sg.reshape((-1,) + (1,) * (qg.ndim - 1))
+        return deq.mean(axis=0)
+
+    return jax.tree.map(one, q_tree, s_tree)
+
+
+def zero_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,87 @@
+"""jit'd dispatch wrappers for the kernels package.
+
+Every op has two implementations: the pure-jnp reference (``ref.py``) used on
+CPU / in the dry-run, and a Pallas TPU kernel. Selection is per-call
+(``use_pallas``) with a process-wide default settable via
+``set_default_backend``. On this CPU container the Pallas path runs in
+interpret mode (tests); on a real TPU fleet ``interpret=False``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+
+_DEFAULT_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+_DEFAULT_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
+
+
+def set_default_backend(use_pallas: bool, interpret: bool = True) -> None:
+    global _DEFAULT_PALLAS, _DEFAULT_INTERPRET
+    _DEFAULT_PALLAS = use_pallas
+    _DEFAULT_INTERPRET = interpret
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def pairwise_scores(q: jax.Array, v: jax.Array, metric: str = "ip") -> jax.Array:
+    """Dense score matrix (no masking/top-k) — plain GEMM, XLA-optimal."""
+    return _ref.pairwise_scores_ref(q, v, metric)
+
+
+def masked_topk(
+    q: jax.Array,
+    v: jax.Array,
+    valid: jax.Array,
+    k: int,
+    *,
+    metric: str = "ip",
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused masked similarity top-k. See fused_knn.py for the TPU kernel."""
+    use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    if use_pallas:
+        from .fused_knn import fused_knn
+
+        return fused_knn(q, v, valid, k=k, metric=metric, interpret=interpret)
+    return _masked_topk_jnp(q, v, valid, k, metric)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _masked_topk_jnp(q, v, valid, k, metric):
+    return _ref.masked_topk_ref(q, v, valid, k, metric)
+
+
+def batched_masked_topk(
+    q: jax.Array,  # [W, TQ, D]  padded work units (see core/planner.py)
+    v: jax.Array,  # [W, TV, D]
+    valid: jax.Array,  # bool [W, TV]
+    k: int,
+    *,
+    metric: str = "ip",
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """vmapped work-unit execution: the device side of Algorithm 3.
+
+    Each work unit is a (query-group tile × posting-list tile) pair assembled
+    by the planner; one call evaluates all units in parallel.
+    """
+    use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    if use_pallas:
+        from .fused_knn import fused_knn
+
+        fn = functools.partial(fused_knn, k=k, metric=metric, interpret=interpret)
+        return jax.vmap(lambda a, b, c: fn(a, b, c))(q, v, valid)
+    return _batched_masked_topk_jnp(q, v, valid, k, metric)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def _batched_masked_topk_jnp(q, v, valid, k, metric):
+    return jax.vmap(lambda a, b, c: _ref.masked_topk_ref(a, b, c, k, metric))(q, v, valid)

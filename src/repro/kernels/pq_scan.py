@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: fused ADC scan (PQ lookup-table distances) + top-k.
+
+The per-query LUT ([M, 256] f32 ≤ 64 KB) stays resident in VMEM while uint8
+code tiles stream from HBM; scores accumulate as M gathers and fold into the
+same running-top-k scratch as fused_knn. HBM traffic per query tile is the
+CODE bytes (d·4/M× less than raw vectors) — this is the paper-family
+(FAISS IVF-PQ) scan, TPU-shaped.
+
+Gather note: Mosaic supports small-table gathers via one-hot matmul when
+dynamic gather is unavailable; we express the lookup as
+one_hot(codes) @ lutᵀ per subspace — an MXU-friendly [TV,256]×[256,1]
+contraction batched over M (interpret mode validates numerics either way).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .fused_knn import NEG_INF, _merge_topk
+
+
+def _pq_scan_kernel(
+    lut_ref,  # [M, 256] f32 — ONE query's tables
+    codes_ref,  # [TV, M] int32
+    valid_ref,  # [1, TV] int32
+    out_s_ref,  # [1, K]
+    out_i_ref,  # [1, K]
+    acc_s_ref,  # scratch [1, K]
+    acc_i_ref,  # scratch [1, K]
+    *,
+    k: int,
+    tv: int,
+    m: int,
+    nv_tiles: int,
+):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s_ref[...] = jnp.full(acc_s_ref.shape, NEG_INF, jnp.float32)
+        acc_i_ref[...] = jnp.full(acc_i_ref.shape, -1, jnp.int32)
+
+    codes = codes_ref[...]  # [TV, M]
+    lut = lut_ref[...]  # [M, 256]
+    # LUT gather as one-hot matmul per subspace (MXU-friendly, Mosaic-safe)
+    scores = jnp.zeros((codes.shape[0],), jnp.float32)
+    for sub in range(m):
+        onehot = (
+            codes[:, sub][:, None] == jax.lax.broadcasted_iota(jnp.int32, (tv, 256), 1)
+        ).astype(jnp.float32)
+        scores = scores + jax.lax.dot_general(
+            onehot, lut[sub], (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+    valid = valid_ref[0, :] != 0
+    scores = jnp.where(valid, scores, NEG_INF)[None, :]  # [1, TV]
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    gidx = jnp.where(valid[None, :], col + j * tv, -1)
+
+    new_s, new_i = _merge_topk(acc_s_ref[...], acc_i_ref[...], scores, gidx, k)
+    acc_s_ref[...] = new_s
+    acc_i_ref[...] = new_i
+
+    @pl.when(j == nv_tiles - 1)
+    def _flush():
+        out_s_ref[...] = new_s
+        out_i_ref[...] = new_i
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tv", "interpret"))
+def pq_scan(
+    lut: jax.Array,  # f32 [M, 256] — one query
+    codes: jax.Array,  # uint8/int32 [NV, M]
+    valid: jax.Array,  # bool [NV]
+    *,
+    k: int,
+    tv: int = 1024,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    nv, m = codes.shape
+    nv_p = max(tv, ((nv + tv - 1) // tv) * tv)
+    codes_p = jnp.zeros((nv_p, m), jnp.int32).at[:nv].set(codes.astype(jnp.int32))
+    valid_p = jnp.zeros((1, nv_p), jnp.int32).at[0, :nv].set(valid.astype(jnp.int32))
+    nv_tiles = nv_p // tv
+    kernel = functools.partial(_pq_scan_kernel, k=k, tv=tv, m=m, nv_tiles=nv_tiles)
+    call = pl.pallas_call(
+        kernel,
+        grid=(nv_tiles,),
+        in_specs=[
+            pl.BlockSpec((m, 256), lambda j: (0, 0)),  # LUT resident
+            pl.BlockSpec((tv, m), lambda j: (j, 0)),
+            pl.BlockSpec((1, tv), lambda j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda j: (0, 0)),
+            pl.BlockSpec((1, k), lambda j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), jnp.float32),
+            pltpu.VMEM((1, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    s, i = call(lut, codes_p, valid_p)
+    return s[0], i[0]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has its reference here; tests sweep shapes and
+dtypes asserting allclose between the kernel (interpret mode on CPU) and
+these functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(-3.4e38)
+
+
+def pairwise_scores_ref(q: jax.Array, v: jax.Array, metric: str = "ip") -> jax.Array:
+    """Similarity scores, best = max. q [nq,d], v [nv,d] -> f32 [nq,nv].
+
+    ip: q·v          l2: -||q - v||²  (negated so max = nearest)
+    """
+    q = q.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    ip = q @ v.T
+    if metric == "ip":
+        return ip
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=1, keepdims=True)  # [nq,1]
+        vn = jnp.sum(v * v, axis=1)[None, :]  # [1,nv]
+        return 2.0 * ip - qn - vn
+    raise ValueError(metric)
+
+
+def masked_topk_ref(
+    q: jax.Array,
+    v: jax.Array,
+    valid: jax.Array,
+    k: int,
+    metric: str = "ip",
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k masked similarity search oracle.
+
+    q [nq,d], v [nv,d], valid bool [nv] (the pushdown bitmap of Section 4.2).
+    Returns (scores f32 [nq,k] best-first, idx int32 [nq,k]); masked-out or
+    absent entries have score -inf and idx -1.
+    """
+    scores = pairwise_scores_ref(q, v, metric)
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    top, idx = jax.lax.top_k(scores, k)
+    idx = jnp.where(top <= NEG_INF / 2, -1, idx).astype(jnp.int32)
+    return top, idx
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference attention. q [B,Hq,S,Dh], k/v [B,Hkv,T,Dh] (GQA: Hq % Hkv == 0).
+
+    window (if set) = sliding-window size W: position i attends to
+    (i - W, i]  (causal local attention, gemma3-style).
+    """
+    b, hq, s, dh = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (dh**0.5)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    logits = jnp.einsum("bhsd,bhtd->bhst", qf, kf)
+    t = kf.shape[2]
+    qpos = jnp.arange(s)[:, None] + (t - s)  # right-aligned (decode: s << t)
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs, vf)
+    return out.astype(q.dtype)

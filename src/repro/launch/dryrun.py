@@ -1,0 +1,352 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be run as its own process (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above executes before any jax import, giving 512 host
+placeholder devices for the production meshes. For every cell we:
+
+    1. build the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+    2. construct the step fn (train_step / prefill / decode / hqi-search),
+    3. lower with ShapeDtypeStruct inputs carrying NamedShardings,
+    4. compile — success proves the distribution config is coherent,
+    5. record memory_analysis + cost_analysis + parsed collective bytes
+       into dryrun_results.json (incremental; re-runs skip finished cells).
+
+Usage:
+    python -m repro.launch.dryrun                    # all cells
+    python -m repro.launch.dryrun --arch qwen3-32b   # one arch
+    python -m repro.launch.dryrun --arch hqi-search  # the paper's step
+    python -m repro.launch.dryrun --shape train_4k --mesh single
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import ARCHS, get_config, optimizer_for  # noqa: E402
+from ..configs.shapes import SHAPES, shapes_for  # noqa: E402
+from ..core.distributed import make_search_step, search_step_specs  # noqa: E402
+from ..distributed.sharding import ShardingRules, tree_param_specs, use_rules  # noqa: E402
+from ..models import api  # noqa: E402
+from ..models.transformer import ModelConfig  # noqa: E402
+from ..train.optimizer import OptConfig  # noqa: E402
+from ..train.train_step import TrainConfig, make_train_step  # noqa: E402
+from . import hlo_cost  # noqa: E402
+from . import roofline as rl  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "..", "..", "..", "dryrun_results.json")
+
+# FSDP (param/optimizer-state sharding over data) for models too big for pure TP.
+FSDP_MIN_PARAMS = 5e9
+# microbatches for train cells: bound activation memory at 4k×256.
+TRAIN_MICROBATCHES = {"default": 8}
+
+HQI_SEARCH_SHAPES = {
+    # the paper's step: N DB vectors × d, M queries per batch
+    "hqi_100m_batch64k": dict(n=100_000_000, d=128, m=65_536),
+    "hqi_100m_online4k": dict(n=100_000_000, d=128, m=4_096),
+}
+
+
+def _rules_for(cfg: ModelConfig, mesh, shape_kind: str) -> ShardingRules:
+    n_params = rl.total_params(cfg)
+    fsdp = n_params >= FSDP_MIN_PARAMS
+    # ZeRO-3 stacked-dim gathers pay off when amortized over a training
+    # batch; decode gathers per token and blows temp memory (§Perf iter 6)
+    return ShardingRules(mesh=mesh, fsdp=fsdp, fsdp_stacked=(shape_kind == "train"))
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda t, s: jax.ShapeDtypeStruct(t.shape, t.dtype, sharding=s), tree, shardings
+    )
+
+
+def _effective_batch_axes(mesh, batch_size: int):
+    """Largest prefix of (pod, data) that divides the batch; () = replicate."""
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    while baxes:
+        prod = int(np.prod([mesh.shape[a] for a in baxes]))
+        if batch_size % prod == 0:
+            return baxes
+        baxes = baxes[1:]
+    return ()
+
+
+def _batch_sharding(mesh, batch_tree, batch_size: int):
+    baxes = _effective_batch_axes(mesh, batch_size)
+    bspec = baxes if baxes else None
+
+    def spec(leaf):
+        return NamedSharding(mesh, P(bspec, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def _cache_sharding(mesh, cfg: ModelConfig, cache_tree, batch_size: int):
+    """KV caches: batch over data axes, kv-heads over model. SSM states:
+
+    batch over data, ssd-heads over model."""
+    baxes = _effective_batch_axes(mesh, batch_size)
+    baxes = baxes if baxes else None
+
+    msize = mesh.shape["model"]
+
+    def place_model(shape, axes, prefs):
+        """Put "model" on the first preferred dim it evenly divides."""
+        for i in prefs:
+            if shape[i] % msize == 0:
+                axes[i] = "model"
+                break
+        return axes
+
+    from ..distributed.sharding import OPT
+
+    def visit(path, leaf):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        nd = len(leaf.shape)
+        shape = leaf.shape
+        if key.endswith("len"):
+            return NamedSharding(mesh, P(baxes))
+        axes = [None] * nd
+        if key.split("/")[-1] in ("k", "v", "xk", "xv"):
+            # [L, B, T, Hkv, dh] (or [G, B, T, Hkv, dh]): batch over data;
+            # optimized scheme shards the TIME axis over model (uniform for
+            # any head count, turns the decode softmax into a psum — measured
+            # 67× less decode collective traffic than uneven head sharding);
+            # baseline: kv-heads if divisible, else head_dim.
+            axes[1] = baxes
+            prefs = (2, 3, 4) if OPT["kv_cache_time_shard"] else (3, 4)
+            axes = place_model(shape, axes, prefs=prefs)
+        elif key.endswith("ssm"):
+            # [L, B, H, N, P] or [G, E, B, H, N, P]
+            b_i = 1 if nd == 5 else 2
+            axes[b_i] = baxes
+            axes = place_model(shape, axes, prefs=(b_i + 1, b_i + 2))
+        elif key.endswith("conv"):
+            b_i = 1 if nd == 4 else 2
+            axes[b_i] = baxes
+            axes = place_model(shape, axes, prefs=(nd - 1,))
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(visit, cache_tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    if arch == "hqi-search":
+        spec = HQI_SEARCH_SHAPES[shape_name]
+        step = make_search_step(mesh, k=10, metric="ip")
+        in_sds = search_step_specs(mesh, **spec)
+        with mesh:
+            lowered = step.lower(*in_sds)
+            compiled = lowered.compile()
+        ma = compiled.memory_analysis()
+        hc = hlo_cost.analyze(compiled.as_text())
+        # model flops: the useful work is 2·N·d·M MACs = 2·N·M·d flops
+        mf = 2.0 * spec["n"] * spec["m"] * spec["d"]
+        terms = rl.RooflineTerms(
+            flops_per_dev=hc.flops,
+            bytes_per_dev=hc.bytes,
+            coll_bytes_per_dev=hc.coll_bytes,
+            coll_breakdown={k: int(v) for k, v in hc.coll.items()},
+            model_flops=mf,
+            chips=chips,
+        )
+        return _result(arch, shape_name, multi_pod, terms, ma, t0, chips)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = _rules_for(cfg, mesh, shape.kind)
+    params_sds0 = api.params_specs(cfg)
+    from ..distributed.sharding import OPT
+
+    if shape.kind in ("prefill", "decode") and OPT["serve_bf16"]:
+        # serving runs bf16 weights (capacity); training keeps fp32 masters
+        params_sds0 = jax.tree.map(
+            lambda t: jax.ShapeDtypeStruct(t.shape, jnp.bfloat16)
+            if t.dtype == jnp.float32
+            else t,
+            params_sds0,
+        )
+    pspecs = tree_param_specs(params_sds0, rules)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    params_sds = _sds(params_sds0, pshard)
+
+    with mesh, use_rules(rules):
+        if shape.kind == "train":
+            mb = TRAIN_MICROBATCHES.get(arch, TRAIN_MICROBATCHES["default"])
+            opt_name = optimizer_for(arch)
+            tcfg = TrainConfig(opt=OptConfig(name=opt_name), microbatches=mb)
+            from ..train.optimizer import init_opt
+
+            opt_sds0 = jax.eval_shape(lambda p: init_opt(p, tcfg.opt), params_sds0)
+            ospecs = tree_param_specs(opt_sds0, rules)
+            oshard = jax.tree.map(lambda s: NamedSharding(mesh, s), ospecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+            opt_sds = _sds(opt_sds0, oshard)
+            batch0 = api.input_specs(cfg, "train", batch=shape.global_batch, seq_len=shape.seq_len)
+            batch_sds = _sds(batch0, _batch_sharding(mesh, batch0, shape.global_batch))
+            step_fn = make_train_step(cfg, tcfg)
+            lowered = jax.jit(step_fn).lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            batch0 = api.input_specs(cfg, "prefill", batch=shape.global_batch, seq_len=shape.seq_len)
+            batch_sds = _sds(batch0, _batch_sharding(mesh, batch0, shape.global_batch))
+            step_fn = lambda p, b: api.serve_prefill(p, cfg, b)
+            lowered = jax.jit(step_fn).lower(params_sds, batch_sds)
+        elif shape.kind == "decode":
+            spec0 = api.input_specs(cfg, "decode", batch=shape.global_batch, seq_len=shape.seq_len)
+            tok_sds = _sds(
+                {"t": spec0["token"]},
+                _batch_sharding(mesh, {"t": spec0["token"]}, shape.global_batch),
+            )["t"]
+            cache_sds = _sds(
+                spec0["cache"],
+                _cache_sharding(mesh, cfg, spec0["cache"], shape.global_batch),
+            )
+            step_fn = lambda p, t, c: api.serve_decode(p, cfg, t, c)
+            lowered = jax.jit(step_fn).lower(params_sds, tok_sds, cache_sds)
+        else:
+            raise ValueError(shape.kind)
+        compiled = lowered.compile()
+
+    ma = compiled.memory_analysis()
+    hc = hlo_cost.analyze(compiled.as_text())
+    terms = rl.RooflineTerms(
+        flops_per_dev=hc.flops,
+        bytes_per_dev=hc.bytes,
+        coll_bytes_per_dev=hc.coll_bytes,
+        coll_breakdown={k: int(v) for k, v in hc.coll.items()},
+        model_flops=rl.model_flops(cfg, shape.kind, shape.global_batch, shape.seq_len),
+        chips=chips,
+    )
+    return _result(arch, shape_name, multi_pod, terms, ma, t0, chips)
+
+
+def _mem_dict(ma) -> Dict[str, Any]:
+    out = {}
+    for attr in (
+        "temp_size_in_bytes",
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        try:
+            out[attr] = int(getattr(ma, attr))
+        except Exception:
+            pass
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def _result(arch, shape_name, multi_pod, terms: rl.RooflineTerms, ma, t0, chips):
+    mem = _mem_dict(ma)
+    live = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "chips": chips,
+        "ok": True,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": mem,
+        "bytes_per_device_live": live,
+        "fits_16gb": bool(live <= 16 * 2**30) if live else None,
+        "roofline": terms.as_dict(),
+    }
+
+
+def all_cells():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape_name in shapes_for(cfg.family):
+            yield arch, shape_name
+    for shape_name in HQI_SEARCH_SHAPES:
+        yield "hqi-search", shape_name
+
+
+def load_results() -> Dict[str, Any]:
+    if os.path.exists(RESULTS_PATH):
+        with open(RESULTS_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def save_results(res: Dict[str, Any]):
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful first-cut scheme (all OPT flags off)")
+    args = ap.parse_args()
+
+    global RESULTS_PATH
+    if args.baseline:
+        from ..distributed.sharding import set_all_opt
+
+        set_all_opt(False)
+        RESULTS_PATH = RESULTS_PATH.replace("dryrun_results", "dryrun_results_baseline")
+    results = load_results()
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    todo = [
+        (a, s, mp)
+        for a, s in all_cells()
+        for mp in meshes
+        if (args.arch is None or a == args.arch) and (args.shape is None or s == args.shape)
+    ]
+    print(f"dry-run: {len(todo)} cells")
+    for arch, shape_name, mp in todo:
+        key = f"{arch}|{shape_name}|{'multi' if mp else 'single'}"
+        if key in results and results[key].get("ok") and not args.force:
+            print(f"SKIP {key} (cached)")
+            continue
+        print(f"RUN  {key} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape_name, mp)
+            r = res["roofline"]
+            print(
+                f"  OK  {res['compile_seconds']}s  flops/dev={r['flops_per_dev']:.3e} "
+                f"bytes/dev={r['bytes_per_dev']:.3e} coll/dev={r['coll_bytes_per_dev']:.3e} "
+                f"bottleneck={r['bottleneck']} useful={r['useful_flop_ratio']:.2f}",
+                flush=True,
+            )
+        except Exception as e:  # noqa: BLE001
+            res = {
+                "arch": arch, "shape": shape_name,
+                "mesh": "multi" if mp else "single",
+                "ok": False, "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+            print(f"  FAIL {type(e).__name__}: {e}", flush=True)
+        results[key] = res
+        save_results(results)
+    n_ok = sum(1 for v in results.values() if v.get("ok"))
+    print(f"done: {n_ok}/{len(results)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,353 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD, post-fusion) HLO.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, which makes
+it useless for scanned-layer models (a 61-layer scan under-counts 61×, nested
+under a microbatch scan 488×). This module re-derives the three roofline
+inputs by walking the HLO text with loop trip counts applied:
+
+  * FLOPs       — from ``dot`` ops (shape × contracting dims; matmuls are
+                  ≥99% of model FLOPs) + ``convolution`` results;
+  * HBM bytes   — a traffic model of post-fusion HLO: every top-level op
+                  reads its operands and writes its result once; fusions that
+                  only dynamic-slice a parameter read just the slice (this is
+                  exactly the scan-over-stacked-weights access pattern);
+  * collectives — result bytes of all-gather / all-reduce / reduce-scatter /
+                  all-to-all / collective-permute, per kind.
+
+Trip counts come from the loop-condition computation's comparison constant
+(jax lowers ``lax.scan``/``fori_loop`` to a 0..N counter while). All numbers
+are per-device (the compiled module is the per-device SPMD program).
+
+Caveat recorded in EXPERIMENTS.md: this container compiles with the CPU
+backend, so fusion boundaries differ from a real TPU compile; FLOPs and
+collective bytes are backend-independent, the bytes term is an estimate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"(\(.*\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+"  # tuple or array type
+    r"([a-z][a-z0-9\-]*)\((.*)$"
+)
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%([\w\.\-]+),\s*body=%([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_FREE_OPS = {"tuple", "get-tuple-element", "bitcast", "parameter", "constant",
+             "after-all", "add-dependency", "partition-id", "replica-id", "iota"}
+
+
+def _shape_elems_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(typestr: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    typestr: str
+    opcode: str
+    rest: str  # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op]
+    table: Dict[str, str]  # op name -> result typestr
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def coll_bytes(self) -> float:
+        return float(sum(self.coll.values()))
+
+    def __add__(self, o: "HLOCost") -> "HLOCost":
+        coll = dict(self.coll)
+        for k, v in o.coll.items():
+            coll[k] = coll.get(k, 0.0) + v
+        return HLOCost(self.flops + o.flops, self.bytes + o.bytes, coll)
+
+    def __mul__(self, k: float) -> "HLOCost":
+        return HLOCost(self.flops * k, self.bytes * k, {a: b * k for a, b in self.coll.items()})
+
+
+def parse_computations(hlo_text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in hlo_text.splitlines():
+        m = _COMP_START_RE.match(line)
+        if m:
+            cur = Computation(m.group(2), [], {})
+            comps[cur.name] = cur
+            if m.group(1):
+                entry = cur.name
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            op = Op(om.group(1), om.group(2), om.group(3), om.group(4))
+            cur.ops.append(op)
+            cur.table[op.name] = op.typestr
+    return comps, entry
+
+
+def _dot_flops(op: Op, table: Dict[str, str]) -> float:
+    # result elements × 2 × contracted size
+    res = _shape_dims(op.typestr)
+    if not res:
+        return 0.0
+    res_elems = 1
+    for d in res[0][1]:
+        res_elems *= d
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    operands = _OPERAND_RE.findall(op.rest.split("),")[0] + ")")
+    contracted = 1
+    if cm and operands:
+        lhs_type = table.get(operands[0], "")
+        lhs = _shape_dims(lhs_type)
+        if lhs:
+            for idx in cm.group(1).split(","):
+                if idx and int(idx) < len(lhs[0][1]):
+                    contracted *= lhs[0][1][int(idx)]
+    return 2.0 * res_elems * contracted
+
+
+def _fusion_root_write_bytes(op: Op, comps: Dict[str, Computation]) -> float:
+    """Write traffic of a fusion: normally its result bytes, BUT a fusion
+
+    rooted in dynamic-update-slice aliases its buffer in place — only the
+    updated slice is written (counting the full carried buffer per scan
+    iteration would charge scans O(L²) traffic they don't do)."""
+    res = _shape_elems_bytes(op.typestr)
+    cm = _CALLS_RE.search(op.rest)
+    if not cm or cm.group(1) not in comps:
+        return res
+    callee = comps[cm.group(1)]
+    roots = [o for o in callee.ops if o.opcode == "dynamic-update-slice"]
+    if roots:
+        # updated slice = second operand of the DUS
+        total = 0.0
+        for r in roots:
+            ops_in = _OPERAND_RE.findall(r.rest)
+            if len(ops_in) >= 2:
+                total += _shape_elems_bytes(callee.table.get(ops_in[1], ""))
+        if total:
+            return total
+    return res
+
+
+def _fusion_read_bytes(op: Op, comps: Dict[str, Computation], table: Dict[str, str]) -> float:
+    """Reads of a fusion: params consumed only via dynamic-slice read just the
+
+    slices; everything else reads the full operand."""
+    cm = _CALLS_RE.search(op.rest)
+    operand_names = _OPERAND_RE.findall(op.rest.split("), ")[0] + ")")
+    operand_names = [o for o in operand_names if o in table]
+    if not cm or cm.group(1) not in comps:
+        return float(sum(_shape_elems_bytes(table.get(o, "")) for o in operand_names))
+    callee = comps[cm.group(1)]
+    # param index -> param op name (parameter(i))
+    param_of: Dict[int, str] = {}
+    for o in callee.ops:
+        if o.opcode == "parameter":
+            pm = re.match(r"(\d+)\)", o.rest)
+            if pm:
+                param_of[int(pm.group(1))] = o.name
+    total = 0.0
+    for i, oname in enumerate(operand_names):
+        full = _shape_elems_bytes(table.get(oname, ""))
+        pname = param_of.get(i)
+        if pname is None:
+            total += full
+            continue
+        uses = [o for o in callee.ops if pname in _OPERAND_RE.findall(o.rest)]
+        if uses and all(u.opcode in ("dynamic-slice", "dynamic-update-slice") for u in uses):
+            sliced = 0.0
+            for u in uses:
+                if u.opcode == "dynamic-slice":
+                    sliced += _shape_elems_bytes(u.typestr)
+                else:  # DUS: the touched region is the update operand's size
+                    ops_in = _OPERAND_RE.findall(u.rest)
+                    if len(ops_in) >= 2:
+                        sliced += _shape_elems_bytes(callee.table.get(ops_in[1], ""))
+            total += sliced
+        else:
+            total += full
+    return total
+
+
+def _fusion_dot_flops(op: Op, comps: Dict[str, Computation]) -> float:
+    """dots folded inside fusions (CPU backend does this for small dots)."""
+    cm = _CALLS_RE.search(op.rest)
+    if not cm or cm.group(1) not in comps:
+        return 0.0
+    callee = comps[cm.group(1)]
+    total = 0.0
+    for o in callee.ops:
+        if o.opcode == "dot":
+            total += _dot_flops(o, callee.table)
+        elif o.opcode == "fusion":
+            total += _fusion_dot_flops(o, comps)
+    return total
+
+
+def _analyze_comp(name: str, comps: Dict[str, Computation], memo: Dict[str, HLOCost]) -> HLOCost:
+    if name in memo:
+        return memo[name]
+    comp = comps[name]
+    cost = HLOCost()
+    for op in comp.ops:
+        if op.opcode in _FREE_OPS:
+            continue
+        if op.opcode == "while":
+            wm = _WHILE_RE.search(op.rest)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = 1
+                if cond in comps:
+                    consts = [int(c) for o in comps[cond].ops for c in _CONST_RE.findall(op_line(o))]
+                    if consts:
+                        trip = max(consts)
+                cost = cost + _analyze_comp(body, comps, memo) * trip
+            continue
+        if op.opcode in ("call", "async-start"):
+            tm = _TO_APPLY_RE.search(op.rest) or _CALLS_RE.search(op.rest)
+            if tm and tm.group(1) in comps:
+                cost = cost + _analyze_comp(tm.group(1), comps, memo)
+            continue
+        if op.opcode == "conditional":
+            # count the max-cost branch once
+            branches = [b for b in _OPERAND_RE.findall(op.rest) if b in comps]
+            if branches:
+                sub = [_analyze_comp(b, comps, memo) for b in branches]
+                cost = cost + max(sub, key=lambda c: c.flops + c.bytes)
+            continue
+        res_bytes = _shape_elems_bytes(op.typestr)
+        if op.opcode == "dynamic-update-slice":
+            ops_in = _OPERAND_RE.findall(op.rest)
+            upd = _shape_elems_bytes(comp.table.get(ops_in[1], "")) if len(ops_in) >= 2 else 0
+            cost.bytes += 2.0 * upd  # read-modify-write of the slice region
+            continue
+        if op.opcode in COLLECTIVES:
+            cost.coll[op.opcode] = cost.coll.get(op.opcode, 0.0) + res_bytes
+            cost.bytes += res_bytes  # collectives also touch HBM
+            continue
+        if op.opcode == "dot":
+            cost.flops += _dot_flops(op, comp.table)
+        elif op.opcode == "convolution":
+            cost.flops += 2.0 * res_bytes  # rough: 2 flops per result byte-ish
+        if op.opcode == "fusion":
+            cost.bytes += _fusion_root_write_bytes(op, comps) + _fusion_read_bytes(op, comps, comp.table)
+            cost.flops += _fusion_dot_flops(op, comps)
+        else:
+            operands = _OPERAND_RE.findall(op.rest)
+            reads = sum(_shape_elems_bytes(comp.table.get(o, "")) for o in operands)
+            cost.bytes += res_bytes + reads
+    memo[name] = cost
+    return cost
+
+
+def op_line(o: Op) -> str:
+    return f"{o.name} = {o.typestr} {o.opcode}({o.rest}"
+
+
+def analyze(hlo_text: str) -> HLOCost:
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        return HLOCost()
+    # exclude computations only reachable as fusion bodies from double count:
+    # _analyze_comp never recurses into `calls=` of fusion ops, so safe.
+    return _analyze_comp(entry, comps, {})
+
+
+def top_ops(hlo_text: str, n: int = 20, weight_trips: bool = True):
+    """Largest single-op contributors (bytes), trip-count weighted — the
+
+    profiler view used by the §Perf hypothesis loop."""
+    comps, entry = parse_computations(hlo_text)
+    if entry is None:
+        return []
+    # compute trip multiplier per computation by walking whiles from entry
+    mult: Dict[str, float] = {entry: 1.0}
+    stack = [entry]
+    while stack:
+        name = stack.pop()
+        comp = comps[name]
+        for op in comp.ops:
+            if op.opcode == "while":
+                wm = _WHILE_RE.search(op.rest)
+                if wm and wm.group(2) in comps:
+                    trip = 1
+                    cond = wm.group(1)
+                    if cond in comps:
+                        consts = [int(c) for o in comps[cond].ops for c in _CONST_RE.findall(op_line(o))]
+                        trip = max(consts) if consts else 1
+                    m = mult[name] * (trip if weight_trips else 1)
+                    if mult.get(wm.group(2), 0) < m:
+                        mult[wm.group(2)] = m
+                        stack.append(wm.group(2))
+            elif op.opcode == "call":
+                tm = _TO_APPLY_RE.search(op.rest)
+                if tm and tm.group(1) in comps:
+                    if mult.get(tm.group(1), 0) < mult[name]:
+                        mult[tm.group(1)] = mult[name]
+                        stack.append(tm.group(1))
+    rows = []
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for op in comp.ops:
+            if op.opcode in _FREE_OPS or op.opcode in ("while", "call", "conditional"):
+                continue
+            res = _shape_elems_bytes(op.typestr)
+            if op.opcode == "fusion":
+                b = _fusion_root_write_bytes(op, comps) + _fusion_read_bytes(op, comps, comp.table)
+            else:
+                reads = sum(_shape_elems_bytes(comp.table.get(o, "")) for o in _OPERAND_RE.findall(op.rest))
+                b = res + reads
+            fl = _dot_flops(op, comp.table) if op.opcode == "dot" else (
+                _fusion_dot_flops(op, comps) if op.opcode == "fusion" else 0.0
+            )
+            rows.append((b * m, fl * m, m, cname, op.opcode, op.name, op.typestr[:60]))
+    rows.sort(key=lambda r: -r[0])
+    return rows[:n]

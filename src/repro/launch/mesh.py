@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing never touches jax
+device state. Single-pod: 16×16 = 256 chips (v5e-256); multi-pod:
+2×16×16 = 512 chips with a leading "pod" axis.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import"
+        )
+    dev_array = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_test_mesh(shape: Tuple[int, ...] = (2, 4), axes: Tuple[str, ...] = ("data", "model")) -> Mesh:
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(f"test mesh {shape} needs {need} devices, found {len(devices)}")
+    return Mesh(np.asarray(devices[:need]).reshape(shape), axes)

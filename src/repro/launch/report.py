@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md roofline tables from dryrun_results*.json.
+
+    PYTHONPATH=src python -m repro.launch.report [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..")
+
+
+def load(name):
+    p = os.path.join(ROOT, name)
+    return json.load(open(p)) if os.path.exists(p) else {}
+
+
+def fmt_s(x):
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.1f}"
+    return f"{x:.3f}"
+
+
+def roofline_table(res, mesh="single"):
+    rows = []
+    for k, v in sorted(res.items()):
+        if not v.get("ok") or v["mesh"] != mesh:
+            continue
+        r = v["roofline"]
+        live = v.get("bytes_per_device_live") or 0
+        rows.append(
+            (
+                f"{v['arch']}|{v['shape']}",
+                r["compute_s"],
+                r["memory_s"],
+                r["collective_s"],
+                r["bottleneck"],
+                r["useful_flop_ratio"],
+                live / 2**30,
+                "✓" if v.get("fits_16gb") else ("✗" if v.get("fits_16gb") is False else "?"),
+            )
+        )
+    out = [
+        "| cell | compute s | memory s | collective s | bottleneck | useful | GiB/dev | ≤16G |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r[0]} | {fmt_s(r[1])} | {fmt_s(r[2])} | {fmt_s(r[3])} | {r[4]} "
+            f"| {r[5]:.2f} | {r[6]:.1f} | {r[7]} |"
+        )
+    return "\n".join(out)
+
+
+def ab_table(base, opt, mesh="single"):
+    out = [
+        "| cell | compute s (b→o) | memory s (b→o) | collective s (b→o) | coll. gain |",
+        "|---|---|---|---|---|",
+    ]
+    for k in sorted(opt):
+        v = opt[k]
+        b = base.get(k)
+        if not v.get("ok") or v["mesh"] != mesh or not b or not b.get("ok"):
+            continue
+        ro, rb = v["roofline"], b["roofline"]
+        gain = rb["collective_s"] / ro["collective_s"] if ro["collective_s"] > 1e-9 else float("inf")
+        out.append(
+            f"| {v['arch']}|{v['shape']} | {fmt_s(rb['compute_s'])}→{fmt_s(ro['compute_s'])} "
+            f"| {fmt_s(rb['memory_s'])}→{fmt_s(ro['memory_s'])} "
+            f"| {fmt_s(rb['collective_s'])}→{fmt_s(ro['collective_s'])} | {gain:.1f}× |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--ab", action="store_true")
+    args = ap.parse_args()
+    opt = load("dryrun_results.json")
+    base = load("dryrun_results_baseline.json")
+    if args.ab and base:
+        print(ab_table(base, opt, args.mesh))
+    else:
+        print(roofline_table(opt, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

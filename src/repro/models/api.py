@@ -1,0 +1,136 @@
+"""Family-dispatching model API: init / loss / prefill / decode / input_specs.
+
+This is the single surface the trainer, server, dry-run, and tests call.
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) for every step kind — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import decode as dec
+from . import encdec as ed
+from .transformer import ModelConfig, init_lm, lm_forward
+
+
+def init_model(cfg: ModelConfig, key: jax.Array):
+    if cfg.family == "encdec":
+        return ed.init_encdec(cfg, key)
+    return init_lm(cfg, key)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# training loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict]:
+    """Causal-LM cross entropy (+ MoE aux). batch:
+
+      tokens int32 [B, S]; labels int32 [B, S] (-100 = ignore);
+      vlm: + vision_embeds [B, P, D]; encdec: + frames [B, F, D].
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    if cfg.family == "encdec":
+        logits = ed.encdec_forward(params, cfg, batch["frames"], tokens)
+        aux = {}
+    elif cfg.family == "vlm":
+        logits, aux = lm_forward(params, cfg, tokens, vision_embeds=batch["vision_embeds"])
+        logits = logits[:, cfg.vision_patches :]  # loss over text positions only
+    else:
+        logits, aux = lm_forward(params, cfg, tokens)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    total = loss
+    if aux:
+        total = total + 0.01 * aux.get("lb_loss", 0.0) + 1e-4 * aux.get("z_loss", 0.0)
+    return total, {"ce_loss": loss, **{k: v for k, v in (aux or {}).items()}}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def serve_prefill(params, cfg: ModelConfig, batch: Dict[str, jax.Array], *, max_len: Optional[int] = None):
+    """max_len pads the KV cache past the prompt to leave room for decoding
+
+    (SSM states are O(1) and need no padding)."""
+    if cfg.family == "encdec":
+        logits, cache = ed.encdec_prefill(params, cfg, batch["frames"], batch["tokens"])
+    elif cfg.family == "vlm":
+        logits, cache = dec.prefill(params, cfg, batch["tokens"], vision_embeds=batch["vision_embeds"])
+    else:
+        logits, cache = dec.prefill(params, cfg, batch["tokens"])
+    if max_len is not None and "k" in cache:
+        t = cache["k"].shape[2]
+        if max_len > t:
+            pad = [(0, 0)] * cache["k"].ndim
+            pad[2] = (0, max_len - t)
+            cache = dict(cache, k=jnp.pad(cache["k"], pad), v=jnp.pad(cache["v"], pad))
+    return logits, cache
+
+
+def serve_decode(params, cfg: ModelConfig, token: jax.Array, cache):
+    if cfg.family == "encdec":
+        return ed.encdec_decode_step(params, cfg, token, cache)
+    return dec.decode_step(params, cfg, token, cache)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family == "encdec":
+        return ed.init_encdec_cache(cfg, batch, max_len)
+    return dec.init_cache(cfg, batch, max_len)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for the dry-run
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, kind: str, *, batch: int, seq_len: int) -> Dict[str, Any]:
+    """kind ∈ {train, prefill, decode}. No device allocation — shapes only."""
+    sds = jax.ShapeDtypeStruct
+    i32, f32 = jnp.int32, jnp.float32
+    if kind == "train":
+        spec = {
+            "tokens": sds((batch, seq_len), i32),
+            "labels": sds((batch, seq_len), i32),
+        }
+        if cfg.family == "vlm":
+            spec["vision_embeds"] = sds((batch, cfg.vision_patches, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            spec["frames"] = sds((batch, cfg.encoder_frames, cfg.d_model), f32)
+        return spec
+    if kind == "prefill":
+        spec = {"tokens": sds((batch, seq_len), i32)}
+        if cfg.family == "vlm":
+            spec["vision_embeds"] = sds((batch, cfg.vision_patches, cfg.d_model), f32)
+        if cfg.family == "encdec":
+            spec["frames"] = sds((batch, cfg.encoder_frames, cfg.d_model), f32)
+        return spec
+    if kind == "decode":
+        cache = init_cache_specs(cfg, batch, seq_len)
+        return {"token": sds((batch,), i32), "cache": cache}
+    raise ValueError(kind)
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct mirror of init_cache (no allocation)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def params_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(lambda: init_model(cfg, jax.random.key(0)))

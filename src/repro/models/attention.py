@@ -1,0 +1,267 @@
+"""Attention: GQA with RoPE, qk-norm, optional QKV bias, sliding windows.
+
+Training/prefill uses a double-chunked online-softmax ("flash") formulation:
+outer ``lax.map`` over query chunks, inner ``lax.scan`` over KV chunks with
+running (max, sum, acc) — peak memory O(q_chunk × kv_chunk) instead of
+O(S²). This pure-JAX path is what the 512-device dry-run lowers; the Pallas
+TPU kernel (kernels/flash_attention.py) is the on-hardware hot path and is
+validated against the same oracle.
+
+Decode (single new token against a KV cache) is a masked single-step
+softmax — O(T) with no materialized S×T anything.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard_activation
+from .layers import _dense_init, init_rmsnorm, rmsnorm, rope
+
+NEG_INF = float(-3.0e38)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False  # qwen3-style per-head RMSNorm on q, k
+    qkv_bias: bool = False  # qwen1.5-style
+    rope_theta: float = 10000.0
+    causal: bool = True
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+def init_attention(key, cfg: AttnConfig) -> Dict[str, Any]:
+    dh = cfg.dh
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(kq, (cfg.d_model, cfg.n_heads * dh)),
+        "wk": _dense_init(kk, (cfg.d_model, cfg.n_kv_heads * dh)),
+        "wv": _dense_init(kv, (cfg.d_model, cfg.n_kv_heads * dh)),
+        "wo": _dense_init(ko, (cfg.n_heads * dh, cfg.d_model), scale=(cfg.n_heads * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def qkv_project(
+    p: Dict[str, Any], x: jax.Array, cfg: AttnConfig, positions: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x [B, S, D] -> q [B,S,Hq,dh], k/v [B,S,Hkv,dh] (roped, normed)."""
+    b, s, _ = x.shape
+    dh = cfg.dh
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, dh)
+    k = k.reshape(b, s, cfg.n_kv_heads, dh)
+    v = v.reshape(b, s, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, "heads")
+    k = shard_activation(k, "kv")
+    v = shard_activation(v, "kv")
+    return q, k, v
+
+
+def flash_attention(
+    q: jax.Array,  # [B, S, Hq, dh]
+    k: jax.Array,  # [B, T, Hkv, dh]
+    v: jax.Array,  # [B, T, Hkv, dh]
+    *,
+    causal: bool = True,
+    window: Optional[jax.Array] = None,  # int32 scalar; 0/None = global
+    q_offset: int | jax.Array = 0,  # absolute position of q[0] (decode)
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> jax.Array:
+    """Double-chunked online-softmax attention. Returns [B, S, Hq, dh]."""
+    b, s, hq, dh = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = dh**-0.5
+
+    q_chunk = min(q_chunk, s)
+    kv_chunk = min(kv_chunk, t)
+    # pad to multiples
+    sp = ((s + q_chunk - 1) // q_chunk) * q_chunk
+    tp = ((t + kv_chunk - 1) // kv_chunk) * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, tp - t), (0, 0), (0, 0)))
+    nq, nk = sp // q_chunk, tp // kv_chunk
+
+    qp = qp.reshape(b, nq, q_chunk, hkv, g, dh)
+    kp = kp.reshape(b, nk, kv_chunk, hkv, dh)
+    vp = vp.reshape(b, nk, kv_chunk, hkv, dh)
+
+    w = window if window is not None else jnp.int32(0)
+    w = jnp.asarray(w, jnp.int32)
+
+    def q_block(args):
+        qi, qc = args  # qi scalar chunk index, qc [b, q_chunk, hkv, g, dh]
+        q_pos = qi * q_chunk + jnp.arange(q_chunk) + q_offset  # [q_chunk]
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, kc, vc = inp  # kc/vc [b, kv_chunk, hkv, dh]
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            logits = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qc.astype(jnp.float32) * scale, kc.astype(jnp.float32)
+            )  # [b, hkv, g, q_chunk, kv_chunk]
+            mask = k_pos[None, :] < t  # in-range (unpadded)
+            mask = jnp.broadcast_to(mask, (q_chunk, kv_chunk))
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            mask = mask & ((w <= 0) | (k_pos[None, :] > q_pos[:, None] - w))
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32)
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32)
+        ks = jnp.arange(nk)
+        # checkpointed body: the scan's backward then recomputes the chunk
+        # probabilities instead of stacking O(S²/chunk) softmax residuals —
+        # flash-attention backward semantics without a custom VJP
+        # (measured: removes the dominant 4×4.5TB DUS traffic, §Perf log)
+        from ..distributed.sharding import OPT
+
+        step_fn = (
+            jax.checkpoint(kv_step, policy=jax.checkpoint_policies.nothing_saveable)
+            if OPT["attn_inner_remat"]
+            else kv_step
+        )
+        (m, l, acc), _ = jax.lax.scan(
+            step_fn, (m0, l0, a0), (ks, jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0))
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.einsum("bhgqd->bqhgd", out)  # [b, q_chunk, hkv, g, dh]
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qp, 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sp, hq, dh)[:, :s]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # [B, 1, Hq, dh] — one new token
+    k_cache: jax.Array,  # [B, T, Hkv, dh]
+    v_cache: jax.Array,  # [B, T, Hkv, dh]
+    cache_len: jax.Array,  # int32 [B] — valid prefix length (incl. new token)
+    *,
+    window: Optional[jax.Array] = None,
+) -> jax.Array:
+    b, _, hq, dh = q.shape
+    t, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = dh**-0.5
+    qg = q.reshape(b, hkv, g, dh).astype(jnp.float32) * scale
+    logits = jnp.einsum("bhgd,bthd->bhgt", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(t)[None, :]  # [1, T]
+    mask = pos < cache_len[:, None]
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        mask = mask & ((w <= 0) | (pos > cache_len[:, None] - 1 - w))
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgt,bthd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def _kv_repeat_for_tp(k: jax.Array, v: jax.Array, hq: int):
+    """GQA sharding alignment: when the tensor-parallel degree exceeds the
+
+    number of KV heads, the (hkv, group) head split forces XLA to reshard the
+    S×S logits between incompatible layouts (observed as 'involuntary full
+    rematerialization' + TB-scale logit all-gathers in the lowered HLO).
+    Broadcasting KV to the full query-head count keeps ONE head axis that
+    shards evenly everywhere; the extra KV bytes are chunk-local and ~100×
+    smaller than the logit traffic they remove. See EXPERIMENTS.md §Perf."""
+    from ..distributed.sharding import OPT, get_rules
+
+    rules = get_rules()
+    hkv = k.shape[2]
+    if not OPT["kv_repeat"] or rules is None or rules.mesh is None or hkv == hq:
+        return k, v
+    tp = rules.mesh.shape.get("model", 1)
+    if hkv % tp == 0:
+        return k, v  # already evenly shardable
+    g = hq // hkv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    return k, v
+
+
+def attention_block(
+    p: Dict[str, Any],
+    x: jax.Array,  # [B, S, D]
+    cfg: AttnConfig,
+    *,
+    positions: jax.Array,
+    window: Optional[jax.Array] = None,
+    kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+    cache_len: Optional[jax.Array] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """Full attention sub-block (projections + attention + output proj).
+
+    Without cache: training/prefill; returns (out, (k, v)) for cache init.
+    With cache: decode; x is [B, 1, D], cache is updated at ``cache_len - 1``.
+    """
+    b, s, _ = x.shape
+    q, k, v = qkv_project(p, x, cfg, positions)
+    if kv_cache is None:
+        ka, va = _kv_repeat_for_tp(k, v, cfg.n_heads)
+        # O(S²) residuals are avoided by the checkpointed kv-scan body inside
+        # flash_attention (flash-backward semantics); a second whole-attention
+        # checkpoint here was measured to only add a redundant forward
+        # recompute (§Perf log iteration 3).
+        out = flash_attention(
+            q, ka, va, causal=cfg.causal, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk
+        )
+        new_cache = (k, v)  # cache keeps the compact GQA heads
+    else:
+        kc, vc = kv_cache
+        idx = cache_len - 1  # position of the new token, per batch row
+        kc = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(c, upd, (i, 0, 0)))(
+            kc, k, idx
+        )
+        vc = jax.vmap(lambda c, upd, i: jax.lax.dynamic_update_slice(c, upd, (i, 0, 0)))(
+            vc, v, idx
+        )
+        out = decode_attention(q, kc, vc, cache_len, window=window)
+        new_cache = (kc, vc)
+    out = out.reshape(b, s, -1)
+    return out @ p["wo"].astype(x.dtype), new_cache

@@ -1,0 +1,285 @@
+"""Prefill + single-token decode for every family (the serving path).
+
+Cache layouts (stacked over layers for scan):
+  dense/vlm/moe: k/v [L, B, T, Hkv, dh] + cache_len int32 [B]
+  ssm:           ssm [L, B, H, N, P], conv [L, B, W-1, C]   (O(1) per token)
+  hybrid:        ssm [G·E ssm states] + per-group KV for the shared block
+
+``decode_32k`` lowers ``decode_step`` with a 32k cache; ``long_500k`` only
+applies to ssm/hybrid where per-token state is O(1)/O(window).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard_activation
+from .attention import attention_block
+from .layers import embed, rmsnorm, unembed
+from .moe import moe_layer
+from .ssm import ssm_block
+from .transformer import ModelConfig, _dense_body, _moe_body, _ssm_body
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Dict[str, Any]:
+    dtype = dtype or cfg.dtype
+    dh = cfg.dh
+    cache: Dict[str, Any] = {"len": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        n_attn = cfg.n_layers
+        cache["k"] = jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads, dh), dtype)
+        cache["v"] = jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads, dh), dtype)
+    elif cfg.family == "ssm":
+        s = cfg.ssm
+        cache["ssm"] = jnp.zeros((cfg.n_layers, batch, s.n_heads, s.d_state, s.head_dim), jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (cfg.n_layers, batch, s.conv_width - 1, s.d_inner + 2 * s.d_state), dtype
+        )
+    elif cfg.family == "hybrid":
+        s = cfg.ssm
+        e = cfg.hybrid_attn_every
+        g = cfg.n_layers // e
+        cache["ssm"] = jnp.zeros((g, e, batch, s.n_heads, s.d_state, s.head_dim), jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (g, e, batch, s.conv_width - 1, s.d_inner + 2 * s.d_state), dtype
+        )
+        cache["k"] = jnp.zeros((g, batch, max_len, cfg.n_kv_heads, dh), dtype)
+        cache["v"] = jnp.zeros((g, batch, max_len, cfg.n_kv_heads, dh), dtype)
+    else:
+        raise ValueError(cfg.family)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# prefill — full-sequence forward that also fills the cache
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    tokens: jax.Array,  # [B, S]
+    *,
+    vision_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Returns (logits of last position [B, V], cache covering the prompt)."""
+    x = embed(params["embedding"], tokens, cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(cfg.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = shard_activation(x, "hidden")
+    cache: Dict[str, Any] = {"len": jnp.full((b,), s, jnp.int32)}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        windows = cfg.layer_windows()
+        body = _moe_body if cfg.family == "moe" else _dense_body
+
+        nd = cfg.moe_first_dense if cfg.family == "moe" else 0
+        ks, vs = [], []
+        if nd:
+            def dense_scan(x, inp):
+                lp, w = inp
+                xh = rmsnorm(x, lp["attn_norm"])
+                h, (k, v) = attention_block(
+                    lp["attn"], xh, cfg.attn_cfg(), positions=positions, window=w,
+                    q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                )
+                x = x + h
+                from .layers import mlp as _mlp
+
+                x = x + _mlp(lp["mlp"], rmsnorm(x, lp["mlp_norm"]))
+                return x, (k, v)
+
+            x, (kd, vd) = jax.lax.scan(dense_scan, x, (params["dense_layers"], windows[:nd]))
+            ks.append(kd)
+            vs.append(vd)
+
+        def scan_body(x, inp):
+            lp, w = inp
+            if cfg.family == "moe":
+                xh = rmsnorm(x, lp["attn_norm"])
+                h, (k, v) = attention_block(
+                    lp["attn"], xh, cfg.attn_cfg(), positions=positions, window=w,
+                    q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                )
+                x = x + h
+                y, _ = moe_layer(lp["moe"], rmsnorm(x, lp["mlp_norm"]), cfg.moe)
+                x = x + y
+            else:
+                xh = rmsnorm(x, lp["attn_norm"])
+                h, (k, v) = attention_block(
+                    lp["attn"], xh, cfg.attn_cfg(), positions=positions, window=w,
+                    q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                )
+                x = x + h
+                from .layers import mlp as _mlp
+
+                x = x + _mlp(lp["mlp"], rmsnorm(x, lp["mlp_norm"]))
+            return x, (k, v)
+
+        fn = jax.checkpoint(scan_body) if cfg.remat else scan_body
+        x, (km, vm) = jax.lax.scan(fn, x, (params["layers"], windows[nd:]))
+        ks.append(km)
+        vs.append(vm)
+        cache["k"] = jnp.concatenate(ks, axis=0) if len(ks) > 1 else ks[0]
+        cache["v"] = jnp.concatenate(vs, axis=0) if len(vs) > 1 else vs[0]
+
+    elif cfg.family == "ssm":
+        def scan_body(x, lp):
+            x, st = _ssm_body(cfg, lp, x, None)
+            return x, (st["ssm"], st["conv"])
+
+        fn = jax.checkpoint(scan_body) if cfg.remat else scan_body
+        x, (ssm_st, conv_st) = jax.lax.scan(fn, x, params["layers"])
+        cache["ssm"], cache["conv"] = ssm_st, conv_st
+
+    elif cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        g = cfg.n_layers // e
+        grouped = jax.tree.map(lambda a: a.reshape((g, e) + a.shape[1:]), params["layers"])
+        shared = params["shared_attn"]
+
+        def group_body(x, glp):
+            def inner(x, lp):
+                x, st = _ssm_body(cfg, lp, x, None)
+                return x, (st["ssm"], st["conv"])
+
+            x, (s_st, c_st) = jax.lax.scan(inner, x, glp)
+            xh = rmsnorm(x, shared["attn_norm"])
+            h, (k, v) = attention_block(
+                shared["attn"], xh, cfg.attn_cfg(), positions=positions,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            )
+            x = x + h
+            from .layers import mlp as _mlp
+
+            x = x + _mlp(shared["mlp"], rmsnorm(x, shared["mlp_norm"]))
+            return x, (s_st, c_st, k, v)
+
+        fn = jax.checkpoint(group_body) if cfg.remat else group_body
+        x, (s_st, c_st, k, v) = jax.lax.scan(fn, x, grouped)
+        cache["ssm"], cache["conv"], cache["k"], cache["v"] = s_st, c_st, k, v
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(x, params["final_norm"])
+    head = params["embedding"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x[:, -1:], head)[:, 0]
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# decode — one new token against the cache
+# ---------------------------------------------------------------------------
+
+
+def decode_step(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    token: jax.Array,  # int32 [B] — the newest token
+    cache: Dict[str, Any],
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Returns (logits [B, V], updated cache). cache["len"] counts tokens
+
+    already in the cache; the new token is written at index cache["len"]."""
+    b = token.shape[0]
+    new_len = cache["len"] + 1
+    positions = (new_len - 1)[:, None]  # [B, 1]
+    x = embed(params["embedding"], token[:, None], cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        windows = cfg.layer_windows()
+
+        def scan_body(x, inp):
+            lp, w, kc, vc = inp
+            if cfg.family == "moe" and "moe" in lp:
+                x, (kc, vc), _ = _moe_body(cfg, lp, x, positions, w, (kc, vc), new_len)
+            else:
+                x, (kc, vc), _ = _dense_body(cfg, lp, x, positions, w, (kc, vc), new_len)
+            return x, (kc, vc)
+
+        nd = cfg.moe_first_dense if cfg.family == "moe" else 0
+        if nd:
+            x, (new_k, new_v) = _decode_scan_split(
+                cfg, params, x, positions, windows, cache, new_len
+            )
+        else:
+            x, (new_k, new_v) = jax.lax.scan(
+                scan_body, x, (params["layers"], windows, cache["k"], cache["v"])
+            )
+        cache = dict(cache, k=new_k, v=new_v, len=new_len)
+
+    elif cfg.family == "ssm":
+        def scan_body(x, inp):
+            lp, s_st, c_st = inp
+            x, st = _ssm_body(cfg, lp, x, {"ssm": s_st, "conv": c_st})
+            return x, (st["ssm"], st["conv"])
+
+        x, (s_st, c_st) = jax.lax.scan(scan_body, x, (params["layers"], cache["ssm"], cache["conv"]))
+        cache = dict(cache, ssm=s_st, conv=c_st, len=new_len)
+
+    elif cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        g = cfg.n_layers // e
+        grouped = jax.tree.map(lambda a: a.reshape((g, e) + a.shape[1:]), params["layers"])
+        shared = params["shared_attn"]
+
+        def group_body(x, inp):
+            glp, s_st, c_st, kc, vc = inp
+
+            def inner(x, inp2):
+                lp, s1, c1 = inp2
+                x, st = _ssm_body(cfg, lp, x, {"ssm": s1, "conv": c1})
+                return x, (st["ssm"], st["conv"])
+
+            x, (s_st, c_st) = jax.lax.scan(inner, x, (glp, s_st, c_st))
+            x, (kc, vc), _ = _dense_body(cfg, shared, x, positions, jnp.int32(0), (kc, vc), new_len)
+            return x, (s_st, c_st, kc, vc)
+
+        x, (s_st, c_st, kc, vc) = jax.lax.scan(
+            group_body, x, (grouped, cache["ssm"], cache["conv"], cache["k"], cache["v"])
+        )
+        cache = dict(cache, ssm=s_st, conv=c_st, k=kc, v=vc, len=new_len)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(x, params["final_norm"])
+    head = params["embedding"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head)[:, 0]
+    return logits, cache
+
+
+def _decode_scan_split(cfg, params, x, positions, windows, cache, new_len):
+    """MoE models with leading dense layers: two scans over the shared cache."""
+    nd = cfg.moe_first_dense
+
+    def dense_scan(x, inp):
+        lp, w, kc, vc = inp
+        x, (kc, vc), _ = _dense_body(cfg, lp, x, positions, w, (kc, vc), new_len)
+        return x, (kc, vc)
+
+    def moe_scan(x, inp):
+        lp, w, kc, vc = inp
+        x, (kc, vc), _ = _moe_body(cfg, lp, x, positions, w, (kc, vc), new_len)
+        return x, (kc, vc)
+
+    x, (k0, v0) = jax.lax.scan(
+        dense_scan, x, (params["dense_layers"], windows[:nd], cache["k"][:nd], cache["v"][:nd])
+    )
+    x, (k1, v1) = jax.lax.scan(
+        moe_scan, x, (params["layers"], windows[nd:], cache["k"][nd:], cache["v"][nd:])
+    )
+    return x, (jnp.concatenate([k0, k1], 0), jnp.concatenate([v0, v1], 0))

@@ -1,0 +1,94 @@
+"""Shared building blocks: norms, rotary embeddings, MLPs, embeddings.
+
+Raw-JAX functional style: params are pytrees of jnp arrays, every layer is a
+pure function. Initializers take explicit PRNG keys. Activations default to
+bf16 with fp32 accumulation in norms/softmax; params are created fp32 and
+cast per config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard_activation
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / (fan_in**0.5)
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def init_rmsnorm(d: int) -> jax.Array:
+    return jnp.zeros((d,), jnp.float32)  # stored as (1 + w) offset form
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Rotary embedding. x [..., S, H, Dh] (Dh even), positions [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs[None, :]  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": _dense_init(k1, (d_model, d_ff)),
+        "w_down": _dense_init(k2, (d_ff, d_model)),
+    }
+    if gated:
+        p["w_gate"] = _dense_init(k3, (d_model, d_ff))
+    return p
+
+
+def mlp(p: Dict[str, Any], x: jax.Array, act: str = "silu") -> jax.Array:
+    up = x @ p["w_up"].astype(x.dtype)
+    if "w_gate" in p:
+        g = x @ p["w_gate"].astype(x.dtype)
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+        h = g * up
+    else:
+        h = jax.nn.silu(up) if act == "silu" else jax.nn.gelu(up)
+    h = shard_activation(h, "mlp")
+    return h @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int) -> jax.Array:
+    return jax.random.normal(key, (vocab, d_model), dtype=jnp.float32) * (d_model**-0.5)
+
+
+def embed(table: jax.Array, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return table.astype(dtype)[tokens]
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    # logits in fp32 for a stable softmax/loss
+    return (x.astype(jnp.float32) @ table.astype(jnp.float32).T)

@@ -1,0 +1,197 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked, TPU-friendly.
+
+Implements the chunked SSD algorithm of Dao & Gu 2024 (arXiv:2405.21060):
+sequence split into chunks; within a chunk the SSD computation is a masked
+(decay-weighted) attention-like matmul; across chunks a small recurrent scan
+carries the [H, N, P] state. All heavy ops are batched einsums (MXU-friendly);
+the cross-chunk scan has O(S / chunk) steps.
+
+Decode is the SSM recurrence proper: state [B, H, dstate, P] updated per
+token in O(1) — this is why ``long_500k`` runs for the SSM/hybrid archs.
+
+Shapes follow the Mamba2 convention: d_inner = expand * d_model split into
+H heads of P = head_dim; B/C are per-group [N = d_state] (n_groups = 1 here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, init_rmsnorm, rmsnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init_ssm(key, cfg: SSMConfig) -> Dict[str, Any]:
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    # in_proj emits [z, x, B, C, dt]
+    d_proj = 2 * di + 2 * n + h
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": _dense_init(k1, (cfg.d_model, d_proj)),
+        "conv_w": _dense_init(k2, (cfg.conv_width, di + 2 * n), scale=0.5),
+        "A_log": jnp.zeros((h,), jnp.float32),  # A = -exp(A_log) in (-inf, 0)
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),  # softplus(-2) ≈ 0.12
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": init_rmsnorm(di),
+        "out_proj": _dense_init(k3, (di, cfg.d_model)),
+    }
+
+
+def _split_proj(p, x, cfg: SSMConfig):
+    di, n, h = cfg.d_inner, cfg.d_state, cfg.n_heads
+    proj = x @ p["in_proj"].astype(x.dtype)  # [B, S, 2di + 2n + h]
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, state: Optional[jax.Array] = None):
+    """Depthwise causal conv, width W. xbc [B, S, C], w [W, C].
+
+    state (decode): last W-1 inputs [B, W-1, C]; returns (out, new_state)."""
+    bsz, s, c = xbc.shape
+    wlen = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((bsz, wlen - 1, c), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # [B, S + W - 1, C]
+    out = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(wlen):
+        out = out + full[:, i : i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = full[:, -(wlen - 1) :] if wlen > 1 else jnp.zeros((bsz, 0, c), xbc.dtype)
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def ssd_chunked(
+    xh: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H]  (post-softplus)
+    A: jax.Array,  # [H] negative
+    Bm: jax.Array,  # [B, S, N]
+    Cm: jax.Array,  # [B, S, N]
+    chunk: int,
+    init_state: Optional[jax.Array] = None,  # [B, H, N, P]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    b, s, h, p_ = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    sp = ((s + q - 1) // q) * q
+    pad = sp - s
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = sp // q
+
+    xh = xh.reshape(b, nc, q, h, p_).astype(jnp.float32)
+    dt = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bm = Bm.reshape(b, nc, q, n).astype(jnp.float32)
+    Cm = Cm.reshape(b, nc, q, n).astype(jnp.float32)
+
+    dA = dt * A[None, None, None, :]  # [B, NC, Q, H] (negative increments)
+    cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative log-decay
+    seg_end = cum[:, :, -1:, :]  # [B, NC, 1, H]
+
+    # ---- intra-chunk (block-diagonal) term ----------------------------------
+    # L[i, j] = exp(cum_i - cum_j) for i >= j  (decay from j to i)
+    li = cum[:, :, :, None, :]  # [B,NC,Q,1,H]
+    lj = cum[:, :, None, :, :]  # [B,NC,1,Q,H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)  # [B,NC,Q,Q,H]
+    cb = jnp.einsum("bcin,bcjn->bcij", Cm, Bm)  # [B,NC,Q,Q]
+    y_intra = jnp.einsum("bcij,bcijh,bcjh,bcjhp->bcihp", cb, L, dt, xh)
+
+    # ---- chunk summary states ------------------------------------------------
+    # state contribution of chunk: Σ_j exp(seg_end - cum_j) dt_j B_j ⊗ x_j
+    decay_to_end = jnp.exp(seg_end - cum)  # [B,NC,Q,H]
+    S_chunk = jnp.einsum("bcjh,bcjh,bcjn,bcjhp->bchnp", decay_to_end, dt, Bm, xh)
+
+    # ---- inter-chunk recurrence (scan over chunks) ---------------------------
+    seg = jnp.exp(seg_end[:, :, 0, :])  # [B, NC, H] total chunk decay
+
+    def step(carry, inp):
+        s_prev = carry  # [B, H, N, P]
+        s_c, g = inp  # [B,H,N,P], [B,H]
+        s_new = s_prev * g[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    init = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, n, p_), jnp.float32)
+    )
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(seg, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # [B, NC, H, N, P]
+
+    # ---- inter-chunk output term ----------------------------------------------
+    decay_from_start = jnp.exp(cum)  # [B,NC,Q,H]
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchnp->bcihp", Cm, decay_from_start, prev_states
+    )
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p_)[:, :s]
+    return y, final_state
+
+
+def ssm_block(
+    p: Dict[str, Any],
+    x: jax.Array,  # [B, S, D]
+    cfg: SSMConfig,
+    *,
+    state: Optional[Dict[str, jax.Array]] = None,  # decode: {"ssm", "conv"}
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full Mamba2 block. Without state: chunked SSD over the sequence.
+
+    With state: single-token recurrent decode (x is [B, 1, D])."""
+    b, s, _ = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    conv_state = state["conv"] if state is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+    xh = xs.reshape(b, s, h, pdim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])  # [H]
+
+    if state is None:
+        y, fin = ssd_chunked(xh, dt, A, Bm, Cm, cfg.chunk)
+    else:
+        # recurrence: h' = exp(dt A) h + dt * (B ⊗ x); y = C·h'
+        s_prev = state["ssm"].astype(jnp.float32)  # [B, H, N, P]
+        g = jnp.exp(dt[:, 0, :] * A[None, :])  # [B, H]
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt[:, 0, :], Bm[:, 0].astype(jnp.float32), xh[:, 0].astype(jnp.float32))
+        fin = s_prev * g[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), fin)[:, None]
+
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_state = {"ssm": fin, "conv": new_conv}
+    return out, new_state

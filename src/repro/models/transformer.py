@@ -1,0 +1,317 @@
+"""Decoder-only LM assembly covering the assigned families:
+
+  dense  — llama-like GQA (minicpm, qwen3 w/ qk_norm, qwen1.5 w/ qkv bias)
+  window — gemma3-style repeating local:global attention pattern
+  moe    — deepseek/kimi-style shared+routed experts with leading dense layers
+  ssm    — mamba2 pure SSD stacks
+  hybrid — zamba2-style: groups of SSD layers + one weight-shared attention
+           block applied per group (distinct KV per invocation)
+  vlm    — internvl2-style: precomputed patch embeddings prepended to tokens
+
+One config dataclass drives init/forward/prefill/decode; layers are stacked
+and scanned (one compiled layer body — keeps dry-run compile time and HLO
+size flat in depth), with optional remat on the layer body.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import shard_activation
+from .attention import AttnConfig, attention_block, init_attention
+from .layers import embed, init_embedding, init_mlp, init_rmsnorm, mlp, rmsnorm, unembed
+from .moe import MoEConfig, init_moe, moe_layer
+from .ssm import SSMConfig, init_ssm, ssm_block
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    # cycle of per-layer sliding windows; 0 = global. gemma3: (w,w,w,w,w,0)
+    window_pattern: Optional[Tuple[int, ...]] = None
+    moe: Optional[MoEConfig] = None
+    moe_first_dense: int = 0
+    ssm: Optional[SSMConfig] = None
+    hybrid_attn_every: int = 0  # zamba2: shared attn after every k ssm layers
+    # enc-dec (whisper): see encdec.py
+    encoder_layers: int = 0
+    encoder_frames: int = 0
+    # vlm: number of stub patch embeddings prepended
+    vision_patches: int = 0
+    tie_embeddings: bool = True
+    embed_scale: bool = False  # gemma-style sqrt(d) embedding scaling
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def subquadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def attn_cfg(self, causal: bool = True) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            qk_norm=self.qk_norm,
+            qkv_bias=self.qkv_bias,
+            rope_theta=self.rope_theta,
+            causal=causal,
+        )
+
+    def layer_windows(self) -> jnp.ndarray:
+        """int32 [n_layers] sliding window per layer (0 = global)."""
+        if self.window_pattern is None:
+            return jnp.zeros((self.n_layers,), jnp.int32)
+        pat = list(self.window_pattern)
+        reps = (self.n_layers + len(pat) - 1) // len(pat)
+        return jnp.asarray((pat * reps)[: self.n_layers], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack_init(key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def init_lm(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embedding": init_embedding(ks[0], cfg.vocab, cfg.d_model),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init_embedding(ks[1], cfg.vocab, cfg.d_model)
+
+    def dense_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": init_rmsnorm(cfg.d_model),
+            "attn": init_attention(k1, cfg.attn_cfg()),
+            "mlp_norm": init_rmsnorm(cfg.d_model),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff),
+        }
+
+    if cfg.family in ("dense", "vlm"):
+        params["layers"] = _stack_init(ks[2], cfg.n_layers, dense_layer)
+    elif cfg.family == "moe":
+        def moe_layer_init(k):
+            k1, k2 = jax.random.split(k)
+            return {
+                "attn_norm": init_rmsnorm(cfg.d_model),
+                "attn": init_attention(k1, cfg.attn_cfg()),
+                "mlp_norm": init_rmsnorm(cfg.d_model),
+                "moe": init_moe(k2, cfg.d_model, cfg.moe),
+            }
+
+        nd = cfg.moe_first_dense
+        if nd:
+            params["dense_layers"] = _stack_init(ks[2], nd, dense_layer)
+        params["layers"] = _stack_init(ks[3], cfg.n_layers - nd, moe_layer_init)
+    elif cfg.family == "ssm":
+        def ssm_layer_init(k):
+            return {"norm": init_rmsnorm(cfg.d_model), "ssm": init_ssm(k, cfg.ssm)}
+
+        params["layers"] = _stack_init(ks[2], cfg.n_layers, ssm_layer_init)
+    elif cfg.family == "hybrid":
+        def ssm_layer_init(k):
+            return {"norm": init_rmsnorm(cfg.d_model), "ssm": init_ssm(k, cfg.ssm)}
+
+        params["layers"] = _stack_init(ks[2], cfg.n_layers, ssm_layer_init)
+        k1, k2 = jax.random.split(ks[3])
+        params["shared_attn"] = {
+            "attn_norm": init_rmsnorm(cfg.d_model),
+            "attn": init_attention(k1, cfg.attn_cfg()),
+            "mlp_norm": init_rmsnorm(cfg.d_model),
+            "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff),
+        }
+    else:
+        raise ValueError(f"init_lm does not handle family {cfg.family!r}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+
+def _dense_body(cfg: ModelConfig, lp, x, positions, window, cache, cache_len):
+    h, new_cache = attention_block(
+        lp["attn"],
+        rmsnorm(x, lp["attn_norm"]),
+        cfg.attn_cfg(),
+        positions=positions,
+        window=window,
+        kv_cache=cache,
+        cache_len=cache_len,
+        q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk,
+    )
+    x = x + h
+    x = x + mlp(lp["mlp"], rmsnorm(x, lp["mlp_norm"]))
+    return shard_activation(x, "hidden"), new_cache, {}
+
+
+def _moe_body(cfg: ModelConfig, lp, x, positions, window, cache, cache_len):
+    h, new_cache = attention_block(
+        lp["attn"],
+        rmsnorm(x, lp["attn_norm"]),
+        cfg.attn_cfg(),
+        positions=positions,
+        window=window,
+        kv_cache=cache,
+        cache_len=cache_len,
+        q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk,
+    )
+    x = x + h
+    y, aux = moe_layer(lp["moe"], rmsnorm(x, lp["mlp_norm"]), cfg.moe, serving=cache is not None)
+    return shard_activation(x + y, "hidden"), new_cache, aux
+
+
+def _ssm_body(cfg: ModelConfig, lp, x, state):
+    h, new_state = ssm_block(lp["ssm"], rmsnorm(x, lp["norm"]), cfg.ssm, state=state)
+    return shard_activation(x + h, "hidden"), new_state
+
+
+# ---------------------------------------------------------------------------
+# forward (training / scoring): full sequence, no cache
+# ---------------------------------------------------------------------------
+
+
+def lm_forward(
+    params: Dict[str, Any],
+    cfg: ModelConfig,
+    tokens: jax.Array,  # int32 [B, S]
+    *,
+    vision_embeds: Optional[jax.Array] = None,  # [B, P, D] (vlm stub frontend)
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (logits f32 [B, S(+P), V], aux losses)."""
+    x = embed(params["embedding"], tokens, cfg.dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds.astype(cfg.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = shard_activation(x, "hidden")
+
+    aux_sum = {"lb_loss": jnp.float32(0), "z_loss": jnp.float32(0), "dropped_frac": jnp.float32(0)}
+
+    def add_aux(a):
+        for k in aux_sum:
+            if k in a:
+                aux_sum[k] = aux_sum[k] + a[k]
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        windows = cfg.layer_windows()
+        body = _moe_body if cfg.family == "moe" else _dense_body
+
+        if cfg.family == "moe" and cfg.moe_first_dense:
+            d_windows = windows[: cfg.moe_first_dense]
+            windows = windows[cfg.moe_first_dense :]
+
+            def dense_scan(x, inp):
+                lp, w = inp
+                x, _, _ = _dense_body(cfg, lp, x, positions, w, None, None)
+                return x, None
+
+            fn = jax.checkpoint(dense_scan) if cfg.remat else dense_scan
+            x, _ = jax.lax.scan(fn, x, (params["dense_layers"], d_windows))
+
+        def scan_body(carry, inp):
+            x, aux = carry
+            lp, w = inp
+            x, _, a = body(cfg, lp, x, positions, w, None, None)
+            new_aux = tuple(
+                aux[i] + a.get(k, jnp.float32(0)) for i, k in enumerate(("lb_loss", "z_loss", "dropped_frac"))
+            )
+            return (x, new_aux), None
+
+        fn = jax.checkpoint(scan_body) if cfg.remat else scan_body
+        (x, aux_t), _ = jax.lax.scan(
+            fn, (x, (jnp.float32(0), jnp.float32(0), jnp.float32(0))), (params["layers"], windows)
+        )
+        aux_sum = dict(zip(("lb_loss", "z_loss", "dropped_frac"), aux_t))
+
+    elif cfg.family == "ssm":
+        def scan_body(x, lp):
+            x, _ = _ssm_body(cfg, lp, x, None)
+            return x, None
+
+        fn = jax.checkpoint(scan_body) if cfg.remat else scan_body
+        x, _ = jax.lax.scan(fn, x, params["layers"])
+
+    elif cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        g = cfg.n_layers // e
+        grouped = jax.tree.map(lambda a: a.reshape((g, e) + a.shape[1:]), params["layers"])
+        shared = params["shared_attn"]
+
+        def group_body(x, glp):
+            def inner(x, lp):
+                x, _ = _ssm_body(cfg, lp, x, None)
+                return x, None
+
+            x, _ = jax.lax.scan(inner, x, glp)
+            x, _, _ = _dense_body(cfg, shared, x, positions, jnp.int32(0), None, None)
+            return x, None
+
+        fn = jax.checkpoint(group_body) if cfg.remat else group_body
+        x, _ = jax.lax.scan(fn, x, grouped)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(x, params["final_norm"])
+    head = params["embedding"] if cfg.tie_embeddings else params["lm_head"]
+    logits = unembed(x, head)
+    logits = shard_activation(logits, "logits")
+    return logits, aux_sum
+
+
+def lm_hidden_embed(params, cfg: ModelConfig, tokens) -> jax.Array:
+    """Mean-pooled final hidden state — the entity-embedding producer used by
+
+    the HQI integration examples (models emit vectors; HQI indexes them)."""
+    x = embed(params["embedding"], tokens, cfg.dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if cfg.family in ("dense", "vlm"):
+        windows = cfg.layer_windows()
+
+        def scan_body(x, inp):
+            lp, w = inp
+            x, _, _ = _dense_body(cfg, lp, x, positions, w, None, None)
+            return x, None
+
+        x, _ = jax.lax.scan(scan_body, x, (params["layers"], windows))
+    else:
+        logits, _ = lm_forward(params, cfg, tokens)
+        return logits.mean(axis=1)  # fallback
+    x = rmsnorm(x, params["final_norm"])
+    return x.mean(axis=1).astype(jnp.float32)

@@ -1,0 +1,109 @@
+"""Batched serving loop: continuous batching over a fixed-slot decode batch.
+
+A slot-based scheduler (vLLM-style, TPU-static-shapes flavor): the decode
+step always runs the full [B_slots] batch; finished/empty slots are masked.
+New requests prefill individually (or in small groups) and their KV is
+inserted into a free slot. This keeps every compiled shape static — the TPU
+requirement — while reaching high slot occupancy under load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import api
+from ..models.transformer import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # int32 [S]
+    max_new_tokens: int = 32
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class SlotServer:
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8, max_len: int = 512, eos_id: int = 1):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = api.init_cache(cfg, n_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.slot_budget = np.zeros(n_slots, dtype=np.int64)
+        self._decode = jax.jit(lambda p, t, c: api.serve_decode(p, cfg, t, c))
+        self._last_token = np.zeros(n_slots, dtype=np.int32)
+
+    # -- admission -------------------------------------------------------------
+
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def admit(self, req: Request) -> bool:
+        """Prefill the request and insert its KV into a free slot."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        toks = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, cache1 = api.serve_prefill(self.params, self.cfg, {"tokens": toks}, max_len=self.max_len)
+        # write the single-row cache into the slot
+        def insert(dst, src):
+            if dst.ndim < 2 or dst.shape[1] != self.n_slots:
+                # leading layer/group dim then batch
+                bdim = next(i for i, d in enumerate(dst.shape) if d == self.n_slots)
+            else:
+                bdim = 1
+            idx = [slice(None)] * dst.ndim
+            idx[bdim] = slice(slot, slot + 1)
+            pad = [(0, d1 - d2) for d1, d2 in zip(dst[tuple(idx)].shape, src.shape)]
+            src = jnp.pad(src, pad)
+            return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+
+        self.cache = jax.tree.map(insert, self.cache, cache1)
+        tok = int(jnp.argmax(logits[0]))
+        req.out_tokens.append(tok)
+        self._last_token[slot] = tok
+        self.slot_req[slot] = req
+        self.slot_budget[slot] = req.max_new_tokens - 1
+        return True
+
+    # -- decode tick -------------------------------------------------------------
+
+    def tick(self):
+        """One decode step for every occupied slot."""
+        if all(r is None for r in self.slot_req):
+            return
+        toks = jnp.asarray(self._last_token, jnp.int32)
+        logits, self.cache = self._decode(self.params, toks, self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), dtype=np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            self._last_token[slot] = tok
+            self.slot_budget[slot] -= 1
+            if tok == self.eos_id or self.slot_budget[slot] <= 0:
+                req.done = True
+                self.slot_req[slot] = None
+
+    def run(self, requests: List[Request], max_ticks: int = 10_000) -> List[Request]:
+        pending = list(requests)
+        for _ in range(max_ticks):
+            while pending and self._free_slot() is not None:
+                self.admit(pending.pop(0))
+            if not pending and all(r is None for r in self.slot_req):
+                break
+            self.tick()
+        return requests

@@ -1,0 +1,176 @@
+"""Optimizers (raw JAX): AdamW and Adafactor, with cosine / WSD schedules.
+
+Adafactor (factored second moment, no first moment by default) is selected by
+the ≥100B configs — at 1T params a full Adam state (8 bytes/param fp32 m+v)
+cannot fit the assigned mesh; the factored state is O(rows + cols) per matrix.
+WSD (warmup–stable–decay) is minicpm's schedule (arXiv:2404.06395).
+
+Optimizer states mirror the param tree structure, so the same sharding rules
+(distributed/sharding.py) apply to them — ZeRO-1 falls out of FSDP rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1  # last 10% of steps decay (WSD)
+    weight_decay: float = 0.01
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    clip_norm: float = 1.0
+    # adafactor
+    factored_min_dim: int = 128
+    decay_rate: float = 0.8
+
+
+def make_schedule(cfg: OptConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            post = 1.0
+        elif cfg.schedule == "cosine":
+            t = jnp.clip(
+                (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1
+            )
+            post = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        elif cfg.schedule == "wsd":
+            decay_start = cfg.total_steps * (1 - cfg.wsd_decay_frac)
+            t = jnp.clip((step - decay_start) / max(cfg.total_steps - decay_start, 1), 0, 1)
+            post = 1.0 - t  # linear decay tail after the stable phase
+        else:
+            raise ValueError(cfg.schedule)
+        return cfg.peak_lr * warm * post
+
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(params, grads, state, cfg: OptConfig, lr):
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        new_p = p.astype(jnp.float32) - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), no first moment
+# ---------------------------------------------------------------------------
+
+
+def _factored(p, cfg: OptConfig) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= cfg.factored_min_dim and p.shape[-2] >= cfg.factored_min_dim
+
+
+def adafactor_init(params, cfg: OptConfig) -> Dict[str, Any]:
+    def init(p):
+        if _factored(p, cfg):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),  # row stats
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col stats
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"slots": jax.tree.map(init, params, is_leaf=None), "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, cfg: OptConfig, lr):
+    step = state["step"] + 1
+    beta2 = 1.0 - step.astype(jnp.float32) ** (-cfg.decay_rate)
+
+    def upd(p, g, slot):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if "vr" in slot:
+            vr = beta2 * slot["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * slot["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            u = g / jnp.sqrt(r[..., None] * vc[..., None, :] + 1e-30)
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * slot["v"] + (1 - beta2) * g2
+            u = g / jnp.sqrt(v + 1e-30)
+            new_slot = {"v": v}
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        new_p = p.astype(jnp.float32) - lr * u - lr * cfg.weight_decay * p.astype(jnp.float32)
+        return new_p.astype(p.dtype), new_slot
+
+    is_slot = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    out = jax.tree.map(upd, params, grads, state["slots"], is_leaf=None)
+    # out is a tree of (param, slot) tuples
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_slots = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"slots": new_slots, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# unified facade
+# ---------------------------------------------------------------------------
+
+
+def init_opt(params, cfg: OptConfig):
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params, cfg)
+    raise ValueError(cfg.name)
+
+
+def apply_opt(params, grads, state, cfg: OptConfig, step_for_lr: Optional[jax.Array] = None):
+    lr = make_schedule(cfg)(step_for_lr if step_for_lr is not None else state["step"])
+    if cfg.name == "adamw":
+        return adamw_update(params, grads, state, cfg, lr)
+    return adafactor_update(params, grads, state, cfg, lr)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), n

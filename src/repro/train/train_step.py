@@ -1,0 +1,73 @@
+"""train_step builder: loss → grads (microbatched, remat'd) → clip → update.
+
+Microbatching is a ``lax.scan`` over gradient accumulation steps; XLA overlaps
+the reduce-scatter of microbatch i's grads with microbatch i+1's compute —
+this is the main compute/communication overlap lever on the DP axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import api
+from ..models.transformer import ModelConfig
+from .optimizer import OptConfig, apply_opt, clip_by_global_norm, init_opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    grad_dtype: Any = jnp.float32  # accumulate grads in fp32
+
+
+def make_train_step(model_cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    batch leaves have leading dim = global_batch; with microbatching they are
+    reshaped to [M, B/M, ...] and scanned.
+    """
+
+    def loss_for(params, mb):
+        loss, aux = api.loss_fn(params, model_cfg, mb)
+        return loss, aux
+
+    grad_fn = jax.value_and_grad(loss_for, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        m = tcfg.microbatches
+        if m <= 1:
+            (loss, aux), grads = grad_fn(params, batch)
+        else:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((m, x.shape[0] // m) + x.shape[1:]), batch
+            )
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, tcfg.grad_dtype), params)
+
+            def acc_step(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, aux), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(tcfg.grad_dtype), g_acc, g)
+                return (g_acc, loss_acc + loss), aux
+
+            (grads, loss), aux = jax.lax.scan(acc_step, (zero, jnp.float32(0)), mb_batch)
+            grads = jax.tree.map(lambda g: g / m, grads)
+            loss = loss / m
+            aux = jax.tree.map(lambda a: a[-1], aux)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.opt.clip_norm)
+        params, opt_state = apply_opt(params, grads, opt_state, tcfg.opt)
+        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model_cfg: ModelConfig, tcfg: TrainConfig, key):
+    params = api.init_model(model_cfg, key)
+    opt_state = init_opt(params, tcfg.opt)
+    return params, opt_state

@@ -1,0 +1,135 @@
+"""End-to-end HQI + baselines: recall vs exhaustive truth, batch parity,
+
+pruning effectiveness, temporal robustness."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    HQIConfig, HQIIndex, PostFilterIndex, PreFilterIndex, RangeIndex,
+    exhaustive_search, recall_at_k, tune_nprobe,
+)
+from repro.core.workload import kg_style, synthetic_bigann_style
+
+from conftest import small_db, small_workload
+
+
+@pytest.fixture(scope="module")
+def truth(db, workload):
+    return exhaustive_search(db, workload)
+
+
+@pytest.fixture(scope="module")
+def hqi(db, workload):
+    return HQIIndex.build(db, workload, HQIConfig(min_partition_size=128, max_leaves=32))
+
+
+def test_hqi_full_nprobe_recall_1(db, workload, truth, hqi):
+    """With every posting list scanned and m=0 routing, HQI must be exact."""
+    res = hqi.search(workload, nprobe=10_000)
+    assert recall_at_k(res, truth) == 1.0
+
+
+def test_hqi_batch_equals_online(db, workload, hqi):
+    rb = hqi.search(workload, nprobe=6)
+    ro = hqi.search_online(workload, nprobe=6)
+    np.testing.assert_allclose(
+        np.where(np.isfinite(rb.scores), rb.scores, -1e30),
+        np.where(np.isfinite(ro.scores), ro.scores, -1e30),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_hqi_prunes_tuples(db, workload, truth, hqi):
+    pre = PreFilterIndex.build(db)
+    nprobe = tune_nprobe(lambda wl, np_: hqi.search(wl, nprobe=np_[0]), workload, truth)
+    res = hqi.search(workload, nprobe=nprobe)
+    pre_np = tune_nprobe(lambda wl, np_: pre.search(wl, nprobe=np_[0]), workload, truth)
+    res_pre = pre.search(workload, nprobe=pre_np)
+    assert recall_at_k(res, truth) >= 0.75
+    assert recall_at_k(res_pre, truth) >= 0.75
+    # workload-aware layout scans fewer tuples at comparable recall
+    assert res.tuples_scanned < res_pre.tuples_scanned
+
+
+def test_prefilter_recall(db, workload, truth):
+    pre = PreFilterIndex.build(db)
+    res = pre.search(workload, nprobe=1_000)  # full scan ⇒ exact
+    assert recall_at_k(res, truth) == 1.0
+
+
+def test_postfilter_low_recall_on_selective(db, workload, truth):
+    post = PostFilterIndex.build(db)
+    res = post.search(workload, nprobe=1_000, expansion=2)
+    pre = PreFilterIndex.build(db).search(workload, nprobe=1_000)
+    # Strategy D with bounded expansion cannot match pushdown on selective
+    # templates (Section 2.3's recall argument)
+    assert recall_at_k(res, truth) < recall_at_k(pre, truth)
+
+
+def test_range_applicability():
+    db, wl, _ = synthetic_bigann_style(n=3000, d=8, n_query_vecs=4, seed=0)
+    assert RangeIndex.applicable(wl)
+    kg = kg_style(n=2000, d=8, queries_per_split=50, seed=0)
+    assert not RangeIndex.applicable(kg.splits[0])  # IN/NOTNULL → NA (Table 3)
+
+
+def test_range_recall_on_partitioning_attr():
+    db, wl, _ = synthetic_bigann_style(n=3000, d=8, n_query_vecs=4, seed=0)
+    r = RangeIndex.build(db, "A", n_buckets=4)
+    truth = exhaustive_search(db, wl)
+    res = r.search(wl, nprobe=1_000)
+    assert recall_at_k(res, truth) == 1.0
+
+
+def test_hqi_m10_centroid_routing(db, workload, truth):
+    hqi = HQIIndex.build(
+        db, workload, HQIConfig(m=4, n_coarse_centroids=8, min_partition_size=128, max_leaves=32)
+    )
+    res = hqi.search(workload, nprobe=10_000)
+    # centroid routing may trade recall for pruning, but must stay high at
+    # full nprobe with m=4 fan-out
+    assert recall_at_k(res, truth) >= 0.8
+
+
+def test_temporal_robustness_smoke():
+    """HQI trained on t0 serves t1..t3 without re-indexing (Table 5)."""
+    kg = kg_style(n=4000, d=16, queries_per_split=120, seed=0)
+    hqi = HQIIndex.build(kg.db, kg.splits[0], HQIConfig(min_partition_size=256, max_leaves=32))
+    for split in kg.splits[1:]:
+        truth = exhaustive_search(kg.db, split)
+        res = hqi.search(split, nprobe=10_000)
+        assert recall_at_k(res, truth) >= 0.99
+
+
+def test_hqi_adaptive_executor(db, workload, hqi):
+    """§6.5 adaptive executor: same results as full batching, picks the
+
+    per-query path for small (template × partition) groups."""
+    ra = hqi.search(workload, nprobe=6, batch_vec="auto")
+    rb = hqi.search(workload, nprobe=6, batch_vec=True)
+    np.testing.assert_allclose(
+        np.where(np.isfinite(ra.scores), ra.scores, -1e30),
+        np.where(np.isfinite(rb.scores), rb.scores, -1e30),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_pq_index_recall_with_rerank(db):
+    """PQ+ADC: compression ≥ 8×, rerank recovers ≥0.8 recall@10 vs exact."""
+    from repro.core.pq import PQIndex
+
+    idx = PQIndex.build(db.vectors, m=8, metric=db.metric)
+    assert idx.compression_ratio >= 8.0
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(32, db.d)).astype(np.float32)
+    s, i = idx.search(q, k=10, rerank=8)
+    ip = q @ db.vectors.T
+    sc = 2 * ip - (db.vectors**2).sum(1)[None] - (q**2).sum(1)[:, None] if db.metric == "l2" else ip
+    truth = np.argsort(-sc, axis=1)[:, :10]
+    rec = np.mean([len(set(i[r].tolist()) & set(truth[r].tolist())) / 10 for r in range(32)])
+    assert rec >= 0.8, rec
+    # bitmap pushdown composes
+    bitmap = rng.random(db.n) > 0.5
+    s2, i2 = idx.search(q, k=10, bitmap=bitmap)
+    ok = i2[i2 >= 0]
+    assert bitmap[ok].all()

@@ -1,0 +1,74 @@
+"""IVF index + batch planner: structural invariants and batch==online parity."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ivf import IVFIndex, ScanStats
+from repro.core.planner import PlanConfig, batch_search_ivf
+
+from conftest import small_db
+
+
+@pytest.fixture(scope="module")
+def ivf(db):
+    return IVFIndex.build(db.vectors, metric=db.metric, n_centroids=24, seed=0)
+
+
+def test_posting_lists_partition(ivf):
+    assert ivf.offsets[-1] == ivf.n
+    assert (np.sort(ivf.order) == np.arange(ivf.n)).all()
+
+
+def test_full_nprobe_equals_exhaustive(db, ivf):
+    """nprobe = n_lists must return the exact global top-k."""
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(db.d,)).astype(np.float32)
+    s, i = ivf.search_single(q, nprobe=ivf.n_lists, k=5)
+    ip = db.vectors @ q
+    sc = 2 * ip - (db.vectors**2).sum(1) - q @ q if db.metric == "l2" else ip
+    truth = np.argsort(-sc, kind="stable")[:5]
+    assert set(i.tolist()) == set(truth.tolist())
+
+
+def test_bitmap_pushdown_equals_postfilter_at_full_probe(db, ivf):
+    """Pushdown must give exactly the matching tuples' top-k."""
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(db.d,)).astype(np.float32)
+    bitmap = rng.random(db.n) < 0.2
+    s, i = ivf.search_single(q, nprobe=ivf.n_lists, k=5, bitmap=bitmap)
+    assert all(bitmap[x] for x in i if x >= 0)
+    ip = db.vectors @ q
+    sc = 2 * ip - (db.vectors**2).sum(1) - q @ q if db.metric == "l2" else ip
+    sc[~bitmap] = -np.inf
+    truth = np.argsort(-sc, kind="stable")[:5]
+    assert set(i.tolist()) == set(truth.tolist())
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100), st.integers(1, 12), st.booleans())
+def test_batch_equals_single(seed, nprobe, with_bitmap):
+    """Algorithm 3 batching returns identical results to per-query scans."""
+    db = small_db(n=800, seed=seed)
+    ivf = IVFIndex.build(db.vectors, metric=db.metric, n_centroids=12, seed=0)
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(17, db.d)).astype(np.float32)
+    bitmap = (rng.random(db.n) < 0.5) if with_bitmap else None
+    bs, bi = batch_search_ivf(ivf, q, nprobe=nprobe, k=4, bitmap=bitmap,
+                              cfg=PlanConfig(tq_unit=8, min_list_pad=8))
+    for r in range(q.shape[0]):
+        ss, si = ivf.search_single(q[r], nprobe=nprobe, k=4, bitmap=bitmap)
+        np.testing.assert_allclose(
+            np.where(np.isfinite(bs[r]), bs[r], -1e30),
+            np.where(np.isfinite(ss), ss, -1e30), rtol=1e-4, atol=1e-4,
+        )
+        assert set(bi[r][bi[r] >= 0].tolist()) == set(si[si >= 0].tolist())
+
+
+def test_stats_accounting(db, ivf):
+    rng = np.random.default_rng(2)
+    q = rng.normal(size=(5, db.d)).astype(np.float32)
+    bitmap = rng.random(db.n) < 0.3
+    st1 = ScanStats()
+    batch_search_ivf(ivf, q, nprobe=4, k=3, bitmap=bitmap, stats=st1)
+    assert st1.tuples_scanned > 0
+    assert 0 < st1.dists_computed <= st1.tuples_scanned

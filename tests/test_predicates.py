@@ -1,0 +1,74 @@
+"""Predicate evaluation, implication soundness, disjointness soundness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predicates import (
+    Between, CentroidIn, Cmp, Contains, In, NotNull, evaluate_filter, make_filter,
+)
+from repro.core.qdtree import predicates_disjoint
+
+from conftest import small_db
+
+DB = small_db(n=1500, seed=3)
+
+
+def _eval(p):
+    cent = np.arange(DB.n, dtype=np.int32) % 7
+    return p.evaluate(DB, cent)
+
+
+num_pred = st.one_of(
+    st.tuples(st.sampled_from(["A", "B"]), st.sampled_from(["<", "<=", ">", ">=", "=="]),
+              st.floats(0, 1, allow_nan=False, width=32)).map(lambda t: Cmp(*t)),
+    st.tuples(st.sampled_from(["A", "B"]),
+              st.floats(0, 1, allow_nan=False, width=32),
+              st.floats(0, 1, allow_nan=False, width=32)).map(
+        lambda t: Between(t[0], min(t[1], t[2]), max(t[1], t[2]))),
+)
+any_pred = st.one_of(
+    num_pred,
+    st.builds(In, st.just("cat"), st.frozensets(st.integers(0, 7), min_size=1, max_size=4)),
+    st.builds(Contains, st.just("tags"), st.integers(0, 5)),
+    st.builds(NotNull, st.sampled_from(["A", "B", "cat", "tags"])),
+    st.builds(CentroidIn, st.frozensets(st.integers(0, 6), min_size=1, max_size=3)),
+)
+
+
+@settings(max_examples=150, deadline=None)
+@given(any_pred, any_pred)
+def test_implication_soundness(p, q):
+    """p.implies(q) must mean eval(p) ⊆ eval(q) — routing correctness rests
+
+    on this."""
+    if p.implies(q):
+        ep, eq = _eval(p), _eval(q)
+        assert not (ep & ~eq).any(), f"{p} claims to imply {q} but does not"
+
+
+@settings(max_examples=150, deadline=None)
+@given(any_pred, any_pred)
+def test_disjointness_soundness(p, q):
+    if predicates_disjoint(p, q):
+        assert not (_eval(p) & _eval(q)).any(), f"{p} and {q} claimed disjoint"
+
+
+def test_filter_conjunction():
+    f = make_filter(Between("A", 0.0, 0.5), NotNull("B"))
+    m = evaluate_filter(f, DB)
+    a = DB.columns["A"].values
+    assert (m == ((a >= 0) & (a < 0.5) & ~DB.columns["B"].null_mask)).all()
+
+
+def test_empty_filter_matches_all():
+    assert evaluate_filter((), DB).all()
+
+
+def test_setcat_contains():
+    m = Contains("tags", 3).evaluate(DB)
+    assert (m == DB.columns["tags"].values[:, 3]).all()
+
+
+def test_nulls_fail_comparisons():
+    m = Cmp("B", ">=", 0.0).evaluate(DB)
+    assert not (m & DB.columns["B"].null_mask).any()

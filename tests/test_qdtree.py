@@ -1,0 +1,83 @@
+"""qd-tree invariants: disjoint complete partitioning + routing soundness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.predicates import evaluate_filter
+from repro.core.qdtree import build_qdtree
+from repro.core.types import Workload
+
+from conftest import small_db, small_workload
+
+
+def _build(seed, n=1200, min_size=64, m_queries=40):
+    db = small_db(n=n, seed=seed)
+    wl = small_workload(db, n_queries=m_queries, seed=seed + 1)
+    tree = build_qdtree(db, wl, min_size=min_size, max_leaves=64)
+    return db, wl, tree
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_leaves_partition_db(seed):
+    db, wl, tree = _build(seed)
+    seen = np.concatenate([l.rows for l in tree.leaves])
+    assert len(seen) == db.n
+    assert len(np.unique(seen)) == db.n  # disjoint + complete
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_routing_soundness(seed):
+    """Every tuple satisfying a template's filter lives in a routed-to leaf —
+
+    semantic-description routing must never lose results."""
+    db, wl, tree = _build(seed)
+    for t in wl.templates:
+        routed = tree.route_filter(t)
+        sat = evaluate_filter(t, db)
+        covered = np.zeros(db.n, dtype=bool)
+        for li, leaf in enumerate(tree.leaves):
+            if routed[li]:
+                covered[leaf.rows] = True
+        assert not (sat & ~covered).any(), f"routing dropped matches for {t}"
+
+
+def test_routing_prunes_something(db, workload):
+    tree = build_qdtree(db, workload, min_size=64, max_leaves=64)
+    assert tree.n_leaves > 4
+    routed = np.stack([tree.route_filter(t) for t in workload.templates])
+    # the selective template must skip at least one leaf
+    assert routed.sum() < routed.size, "no pruning at all"
+
+
+def test_balanced_splits(db, workload):
+    tree = build_qdtree(db, workload, min_size=64, max_leaves=64)
+    sizes = np.array([len(l.rows) for l in tree.leaves])
+    # no pathological giant leaf (> 70% of data) once the tree split at all
+    assert sizes.max() < 0.7 * db.n
+
+
+def test_empty_workload_single_leaf(db):
+    wl = Workload(vectors=np.zeros((0, db.d), np.float32), templates=[], template_of=np.zeros(0, np.int32))
+    tree = build_qdtree(db, wl)
+    assert tree.n_leaves == 1
+    assert len(tree.leaves[0].rows) == db.n
+
+
+def test_centroid_routing(db, workload):
+    from repro.core import kmeans as km
+
+    cents = km.train_kmeans(db.vectors, 8, iters=4, metric=db.metric)
+    c_of = km.assign_kmeans(db.vectors, cents, metric=db.metric)
+    qc = km.topm_centroids(workload.vectors, cents, 2, metric=db.metric)
+    tree = build_qdtree(
+        db, workload, centroid_of=c_of, query_centroids=qc, n_centroids=8,
+        min_size=64, max_leaves=64,
+    )
+    allowed = tree.centroid_allowed()
+    assert allowed.shape == (tree.n_leaves, 8)
+    # soundness: a leaf's tuples' centroids must all be allowed
+    for li, leaf in enumerate(tree.leaves):
+        present = np.unique(c_of[leaf.rows])
+        assert allowed[li, present].all()

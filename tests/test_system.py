@@ -1,0 +1,110 @@
+"""End-to-end system tests: the related-KG-queries scenario on a KG-shaped
+
+dataset (the paper's running example), the serving loop, and the HLO cost
+machinery the roofline depends on."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    HQIConfig, HQIIndex, PreFilterIndex, exhaustive_search, recall_at_k, tune_nprobe,
+)
+from repro.core.workload import kg_style, lp_style
+
+
+@pytest.fixture(scope="module")
+def kg():
+    return kg_style(n=6000, d=24, queries_per_split=150, seed=7)
+
+
+def test_related_queries_end_to_end(kg):
+    """Build HQI from t0, answer t0 at target recall, beat PreFilter on
+
+    tuples scanned — the paper's headline scenario in miniature."""
+    wl = kg.splits[0]
+    truth = exhaustive_search(kg.db, wl)
+    hqi = HQIIndex.build(kg.db, wl, HQIConfig(min_partition_size=512, max_leaves=32))
+    nprobe = tune_nprobe(lambda w, np_: hqi.search(w, nprobe=np_[0]), wl, truth)
+    res = hqi.search(wl, nprobe=nprobe)
+    assert recall_at_k(res, truth) >= 0.8
+
+    pre = PreFilterIndex.build(kg.db)
+    pre_np = tune_nprobe(lambda w, np_: pre.search(w, nprobe=np_[0]), wl, truth)
+    res_pre = pre.search(wl, nprobe=pre_np)
+    assert recall_at_k(res_pre, truth) >= 0.8
+    assert res.tuples_scanned < res_pre.tuples_scanned, (
+        res.tuples_scanned, res_pre.tuples_scanned,
+    )
+
+
+def test_workload_selectivity_structure(kg):
+    """The generated templates span Table-1-like selectivities (4 decades)."""
+    sels = np.array(sorted(kg.selectivities.values()))
+    assert sels[0] < 0.005
+    assert sels[-1] > 0.3
+
+
+def test_lp_workload_batching_only():
+    db, wl = lp_style(n=3000, d=16, n_queries=100, seed=1)
+    truth = exhaustive_search(db, wl)
+    pre = PreFilterIndex.build(db)
+    res = pre.search(wl, nprobe=1000, batch_vec=True)
+    assert recall_at_k(res, truth) == 1.0
+
+
+def test_serving_loop_matches_unbatched():
+    """SlotServer greedy decode == sequential prefill+decode per request."""
+    from repro.configs import get_reduced
+    from repro.models import api
+    from repro.serve.server import Request, SlotServer
+    import dataclasses
+
+    cfg = dataclasses.replace(get_reduced("minicpm-2b"), dtype=jnp.float32)
+    params = api.init_model(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab, 8).astype(np.int32) for _ in range(5)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=6) for i, p in enumerate(prompts)]
+    srv = SlotServer(params, cfg, n_slots=3, max_len=32, eos_id=-1)
+    srv.run(reqs)
+    for p, r in zip(prompts, reqs):
+        toks = jnp.asarray(p[None, :], jnp.int32)
+        logits, cache = api.serve_prefill(params, cfg, {"tokens": toks}, max_len=32)
+        want = [int(jnp.argmax(logits[0]))]
+        for _ in range(5):
+            logits, cache = api.serve_decode(params, cfg, jnp.asarray([want[-1]], jnp.int32), cache)
+            want.append(int(jnp.argmax(logits[0])))
+        assert r.out_tokens == want, (r.out_tokens, want)
+
+
+def test_hlo_cost_trip_counts():
+    """The roofline's FLOP accounting must multiply scan bodies by trip count
+
+    (XLA's cost_analysis does not)."""
+    from repro.launch import hlo_cost
+
+    def scanned(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+    txt = jax.jit(scanned).lower(x, ws).compile().as_text()
+    c = hlo_cost.analyze(txt)
+    assert c.flops == pytest.approx(12 * 2 * 256**3, rel=1e-6)
+
+
+def test_roofline_param_counts():
+    from repro.configs import get_config
+    from repro.launch.roofline import total_params
+    from repro.models import api
+
+    # analytic total_params must match the real init within 2%
+    for arch in ("minicpm-2b", "deepseek-moe-16b"):
+        cfg = get_config(arch)
+        sds = api.params_specs(cfg)
+        real = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(sds))
+        approx = total_params(cfg)
+        assert abs(real - approx) / real < 0.02, (arch, real, approx)
