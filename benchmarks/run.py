@@ -2,15 +2,28 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run table3_4   # one asset
-    REPRO_BENCH_FAST=1 ...                             # CI-speed smoke
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI-speed smoke subset
+    REPRO_BENCH_FAST=1 ...                             # small sizes, any suite
 
 Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py).
 """
+import os
 import sys
+
+SMOKE_SUITES = ["engine", "kernels"]
 
 
 def main() -> None:
-    from . import bench_fig4_5, bench_fig6, bench_fig7, bench_kernels, bench_table3_4, bench_table5
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        args = [a for a in args if a != "--smoke"]
+        os.environ["REPRO_BENCH_FAST"] = "1"
+        args = args or SMOKE_SUITES
+
+    from . import (
+        bench_engine, bench_fig4_5, bench_fig6, bench_fig7, bench_kernels,
+        bench_table3_4, bench_table5,
+    )
 
     suites = {
         "table3_4": bench_table3_4.main,
@@ -19,8 +32,9 @@ def main() -> None:
         "fig6": bench_fig6.main,
         "fig7": bench_fig7.main,
         "kernels": bench_kernels.main,
+        "engine": bench_engine.main,
     }
-    picks = sys.argv[1:] or list(suites)
+    picks = args or list(suites)
     print("name,us_per_call,derived")
     for p in picks:
         suites[p]()

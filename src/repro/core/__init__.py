@@ -3,7 +3,9 @@
 Public API:
     VectorDatabase, Column, Workload, HybridQuery, SearchResult
     predicates: Cmp, Between, In, Contains, NotNull, CentroidIn, make_filter
-    HQIIndex / HQIConfig — workload-aware index + Algorithm-3 batch search
+    HQIIndex / HQIConfig / Router — workload-aware index + Algorithm-3 search
+    engine: PackedArena, PlanConfig, EngineTask, ExecutionPlan,
+            build_plan / execute_plan, batch_search_ivf
     baselines: exhaustive_search, PreFilterIndex, PostFilterIndex, RangeIndex
     metrics: recall_at_k, tune_nprobe
 """
@@ -28,7 +30,10 @@ from .predicates import (  # noqa: F401
 )
 from .qdtree import QDTree, build_qdtree  # noqa: F401
 from .ivf import IVFIndex, ScanStats  # noqa: F401
-from .hqi import HQIConfig, HQIIndex  # noqa: F401
+from .arena import PackedArena  # noqa: F401
+from .plan import EngineTask, ExecutionPlan, PlanConfig, build_plan  # noqa: F401
+from .planner import batch_search_ivf, execute_plan  # noqa: F401
+from .hqi import HQIConfig, HQIIndex, Router  # noqa: F401
 from .baselines import (  # noqa: F401
     PostFilterIndex,
     PreFilterIndex,

@@ -1,0 +1,133 @@
+"""Index-wide packed vector arena — the storage side of the execution engine.
+
+Every partition's IVF stores its vectors re-ordered so each posting list is a
+contiguous slice (see ivf.py). The arena concatenates those per-partition
+``packed`` arrays into ONE index-wide array and exposes a *global* posting-list
+table: posting list ``g`` of any partition lives at
+``packed[list_start[g] : list_start[g] + list_len[g]]``.
+
+This is what lets the planner bucket work units across partitions and
+templates: a single ``packed[rows]`` gather (and a single device transfer)
+serves every partition, so one kernel dispatch can mix posting lists from
+anywhere in the index. ``gid`` maps packed rows straight back to the caller's
+tuple ids (global database rows for HQI, local vector indices for a standalone
+IVF), so executor output needs no per-partition id translation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from . import kmeans as km
+from .ivf import IVFIndex
+
+
+@dataclasses.dataclass
+class PackedArena:
+    """Concatenated posting-list storage for one or more IVF partitions."""
+
+    packed: np.ndarray  # f32 [N, d] — all partitions, posting-list order
+    gid: np.ndarray  # i64 [N] — packed row -> caller tuple id
+    local_of: np.ndarray  # i64 [N] — packed row -> partition-local vector idx
+    list_start: np.ndarray  # i64 [G] — first packed row of global list g
+    list_len: np.ndarray  # i64 [G]
+    list_base: np.ndarray  # i64 [P + 1] — partition p owns lists [base[p], base[p+1])
+    part_row: np.ndarray  # i64 [P + 1] — partition p owns packed rows [row[p], row[p+1])
+    centroids: List[np.ndarray]  # per-partition coarse quantizer
+    metric: str
+
+    @property
+    def n(self) -> int:
+        return int(self.packed.shape[0])
+
+    @property
+    def d(self) -> int:
+        return int(self.packed.shape[1])
+
+    @property
+    def n_parts(self) -> int:
+        return len(self.centroids)
+
+    @property
+    def n_lists(self) -> int:
+        return int(self.list_start.shape[0])
+
+    def n_lists_of(self, part: int) -> int:
+        return int(self.list_base[part + 1] - self.list_base[part])
+
+    def probe(self, part: int, q_vecs: np.ndarray, nprobe: int) -> np.ndarray:
+        """nprobe nearest posting lists of partition ``part`` as GLOBAL list ids.
+
+        int32 [m, min(nprobe, n_lists_of(part))]. Identical ranking to
+        ``IVFIndex.probe`` (same quantizer, same top-m kernel) so engine
+        results match the per-query scan path exactly.
+        """
+        nprobe = int(min(nprobe, self.n_lists_of(part)))
+        local = km.topm_centroids(q_vecs, self.centroids[part], nprobe, metric=self.metric)
+        return local + np.int32(self.list_base[part])
+
+    def packed_bitmap(self, part: int, local_bitmap: np.ndarray) -> np.ndarray:
+        """Partition-local vector-order bitmap -> that partition's packed order."""
+        s, e = int(self.part_row[part]), int(self.part_row[part + 1])
+        return local_bitmap[self.local_of[s:e]]
+
+    # ------------------------------------------------------------ constructors
+
+    @staticmethod
+    def from_partitions(parts: Sequence[Tuple[np.ndarray, IVFIndex]]) -> "PackedArena":
+        """parts: (rows, ivf) pairs; ``rows`` maps ivf-local idx -> caller id."""
+        if not parts:
+            raise ValueError("arena needs at least one partition")
+        metric = parts[0][1].metric
+        if len(parts) == 1:
+            rows, ivf = parts[0]
+            return PackedArena(
+                packed=ivf.packed,
+                gid=np.asarray(rows, dtype=np.int64)[ivf.order],
+                local_of=ivf.order,
+                list_start=ivf.offsets[:-1].astype(np.int64),
+                list_len=np.diff(ivf.offsets).astype(np.int64),
+                list_base=np.array([0, ivf.n_lists], dtype=np.int64),
+                part_row=np.array([0, ivf.n], dtype=np.int64),
+                centroids=[ivf.centroids],
+                metric=metric,
+            )
+        packed, gid, local_of, starts, lens, cents = [], [], [], [], [], []
+        list_base = np.zeros(len(parts) + 1, dtype=np.int64)
+        part_row = np.zeros(len(parts) + 1, dtype=np.int64)
+        for p, (rows, ivf) in enumerate(parts):
+            assert ivf.metric == metric, "mixed-metric partitions"
+            packed.append(ivf.packed)
+            gid.append(np.asarray(rows, dtype=np.int64)[ivf.order])
+            local_of.append(ivf.order)
+            starts.append(ivf.offsets[:-1].astype(np.int64) + part_row[p])
+            lens.append(np.diff(ivf.offsets).astype(np.int64))
+            cents.append(ivf.centroids)
+            list_base[p + 1] = list_base[p] + ivf.n_lists
+            part_row[p + 1] = part_row[p] + ivf.n
+        return PackedArena(
+            packed=np.concatenate(packed, axis=0),
+            gid=np.concatenate(gid),
+            local_of=np.concatenate(local_of),
+            list_start=np.concatenate(starts),
+            list_len=np.concatenate(lens),
+            list_base=list_base,
+            part_row=part_row,
+            centroids=cents,
+            metric=metric,
+        )
+
+    @staticmethod
+    def from_ivf(ivf: IVFIndex) -> "PackedArena":
+        """Single-index arena; ``gid`` is the ivf-local vector index.
+
+        Memoized on the (immutable) index instance — repeated
+        ``batch_search_ivf`` calls over one IVF pay the O(n) id mapping once.
+        """
+        arena = getattr(ivf, "_arena_cache", None)
+        if arena is None:
+            arena = PackedArena.from_partitions([(np.arange(ivf.n, dtype=np.int64), ivf)])
+            ivf._arena_cache = arena
+        return arena

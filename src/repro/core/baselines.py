@@ -25,8 +25,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from .arena import PackedArena
 from .ivf import IVFIndex, ScanStats
-from .planner import PlanConfig, batch_search_ivf
+from .plan import EngineTask, PlanConfig, build_plan
+from .planner import batch_search_ivf, execute_plan
 from .predicates import Between, Cmp, evaluate_filter
 from .types import SearchResult, VectorDatabase, Workload
 
@@ -86,14 +88,15 @@ class PreFilterIndex:
         nprobe: Union[int, Dict[int, int]] = 8,
         batch_attr: bool = True,
         batch_vec: bool = False,
-        plan: PlanConfig = PlanConfig(),
+        plan: Optional[PlanConfig] = None,
     ) -> SearchResult:
         """batch_attr: amortize bitmaps per template (on for all baselines,
 
-        as in the paper). batch_vec: Alg.-3 style vector batching — off for
-        the PreFilter baseline, on gives the "batching on a vanilla IVF"
-        ablation of Sections 6.3/6.5.
+        as in the paper). batch_vec: Alg.-3 style vector batching through the
+        plan/execute engine (planner.py) — off for the PreFilter baseline, on
+        gives the "batching on a vanilla IVF" ablation of Sections 6.3/6.5.
         """
+        plan = PlanConfig() if plan is None else plan
         m, k = workload.m, workload.k
         out_s = np.full((m, k), -np.inf, np.float32)
         out_i = np.full((m, k), -1, np.int64)
@@ -103,6 +106,8 @@ class PreFilterIndex:
             order = [(ti, workload.queries_for_template(ti)) for ti in range(len(workload.templates))]
         else:
             order = [(int(workload.template_of[qi]), np.array([qi])) for qi in range(m)]
+        arena = PackedArena.from_ivf(self.ivf) if batch_vec else None
+        tasks = []
         for ti, qidx in order:
             if len(qidx) == 0:
                 continue
@@ -114,16 +119,28 @@ class PreFilterIndex:
                     bitmap_cache[ti] = bitmap
             np_t = nprobe[ti] if isinstance(nprobe, dict) else nprobe
             if batch_vec:
-                s, ix = batch_search_ivf(
-                    self.ivf, workload.vectors[qidx], nprobe=np_t, k=k, bitmap=bitmap, stats=stats, cfg=plan
+                # all-false bitmaps still become tasks: build_plan accounts the
+                # scanned (bitmap-killed) lists exactly like search_single does
+                packed = None if bitmap.all() else arena.packed_bitmap(0, bitmap)
+                tasks.append(
+                    EngineTask(
+                        part=0,
+                        qrows=qidx.astype(np.int64),
+                        nprobe=int(min(np_t, self.ivf.n_lists)),
+                        packed_bitmap=packed,
+                    )
                 )
-                out_s[qidx], out_i[qidx] = s, ix
             else:
                 for qi in qidx:
                     s, ix = self.ivf.search_single(
                         workload.vectors[qi], nprobe=np_t, k=k, bitmap=bitmap, stats=stats
                     )
                     out_s[qi], out_i[qi] = s, ix
+        if batch_vec:
+            # one global plan across ALL templates — a single megabatched
+            # dispatch per bucket shape instead of one loop pass per template
+            eplan = build_plan(arena, tasks, workload.vectors, m=m, k=k, cfg=plan, stats=stats)
+            out_s, out_i = execute_plan(eplan, arena, workload.vectors, cfg=plan)
         return SearchResult(ids=out_i, scores=out_s, tuples_scanned=stats.tuples_scanned)
 
 

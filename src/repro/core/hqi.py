@@ -1,16 +1,31 @@
 """HQI — the paper's hybrid query index (Sections 4 + 5, end to end).
 
 Build:  coarse k-means (m > 0 mode) → balanced qd-tree over attribute +
-centroid cut predicates → one IVF index per leaf partition (√|Pᵢ| lists).
+centroid cut predicates → one IVF index per leaf partition (√|Pᵢ| lists) →
+one index-wide ``PackedArena`` concatenating every partition's posting lists.
 
-Batch search (Algorithm 3 across partitions):
-  group by template → route template×partition via semantic descriptions
-  (+ per-query centroid routing when m > 0) → per (partition, template):
-  bitmap pushdown + planner work units (one matmul per posting-list group)
-  → per-query merge across partitions.
+Batch search (Algorithm 3 across partitions) is a two-stage plan/execute
+engine over the whole workload:
+
+  * ``Router`` (the routing layer): template → partition routes via semantic
+    descriptions, per-query centroid gating when m > 0, and the template
+    bitmap cache — all the host-side pruning of Sections 4.1.3 / 4.2.
+  * Stage 1 (core/plan.py): every routed (template × partition) product
+    becomes an ``EngineTask``; ``build_plan`` buckets ALL resulting
+    (query-chunk × posting-list) work units globally by padded shape, under
+    the ``PlanConfig.max_bucket_shapes`` compile-shape budget.
+  * Stage 2 (core/planner.py): each bucket executes as ONE megabatched
+    kernel dispatch through the arena, and the cross-partition merge is one
+    device-side segmented top-k.
+
+Kernel dispatches per workload are therefore O(#buckets) ≤
+``max_bucket_shapes`` instead of O(templates × partitions).
 
 Online search: same routing, per-query IVF scans (used standalone — the
-"workload-aware index only" configuration of Section 6.5).
+"workload-aware index only" configuration of Section 6.5). The "auto" mode
+is the paper's adaptive executor: small (template × partition) groups take
+the per-query path, everything else joins the global plan, and both feed the
+same final merge.
 """
 from __future__ import annotations
 
@@ -22,8 +37,10 @@ from typing import Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from . import kmeans as km
+from .arena import PackedArena
 from .ivf import IVFIndex, ScanStats
-from .planner import PlanConfig, batch_search_ivf
+from .plan import EngineTask, PlanConfig, build_plan
+from .planner import ExtraCandidates, execute_plan
 from .predicates import evaluate_filter
 from .qdtree import QDTree, build_qdtree
 from .types import SearchResult, VectorDatabase, Workload
@@ -59,6 +76,53 @@ class BuildInfo:
         return self.qdtree_seconds + self.ivf_seconds + self.coarse_seconds
 
 
+class Router:
+    """The routing layer: which (template, query) reaches which partition.
+
+    Owns the qd-tree semantic-description routing (Section 4.1.3), the
+    per-query centroid gating of the m > 0 mode, and the template bitmap
+    cache (Section 4.2) — everything the engine needs to turn a workload
+    into ``EngineTask``s.
+    """
+
+    def __init__(
+        self,
+        db: VectorDatabase,
+        tree: QDTree,
+        coarse_centroids: Optional[np.ndarray],
+        m_fanout: int,
+    ):
+        self.db = db
+        self.tree = tree
+        self.coarse_centroids = coarse_centroids
+        self.m_fanout = m_fanout
+        self._bitmap_cache: Dict[tuple, np.ndarray] = {}
+
+    def template_bitmap(self, filt: tuple) -> np.ndarray:
+        if filt not in self._bitmap_cache:
+            self._bitmap_cache[filt] = evaluate_filter(filt, self.db)
+        return self._bitmap_cache[filt]
+
+    def clear_cache(self) -> None:
+        self._bitmap_cache.clear()
+
+    def routes(self, workload: Workload) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+        """(template_routes bool [T, L], query_centroid_ok bool [m, L] | None)."""
+        troutes = np.stack([self.tree.route_filter(t) for t in workload.templates])
+        qcent_ok = None
+        if self.m_fanout > 0 and self.coarse_centroids is not None:
+            allowed = self.tree.centroid_allowed()  # [L, nc]
+            qc = km.topm_centroids(
+                workload.vectors, self.coarse_centroids, self.m_fanout, metric=self.db.metric
+            )  # [m, mfan]
+            # query ok in leaf iff any of its m centroids is allowed there
+            onehot = np.zeros((workload.m, allowed.shape[1]), dtype=bool)
+            rows = np.repeat(np.arange(workload.m), qc.shape[1])
+            onehot[rows, qc.reshape(-1)] = True
+            qcent_ok = (onehot @ allowed.T.astype(np.int64)) > 0  # [m, L]
+        return troutes, qcent_ok
+
+
 class HQIIndex:
     def __init__(
         self,
@@ -75,12 +139,26 @@ class HQIIndex:
         self.cfg = cfg
         self.coarse_centroids = coarse_centroids
         self.build_info = build_info
-        self._bitmap_cache: Dict[tuple, np.ndarray] = {}
+        self.router = Router(db, tree, coarse_centroids, cfg.m)
+        self._arena: Optional[PackedArena] = None
+
+    @property
+    def arena(self) -> PackedArena:
+        """Index-wide packed arena, materialized on first engine-backed search
+        (the per-query-only configuration never pays the concatenation)."""
+        if self._arena is None:
+            self._arena = PackedArena.from_partitions(
+                [(p.rows, p.ivf) for p in self.partitions]
+            )
+        return self._arena
 
     # ------------------------------------------------------------------ build
 
     @staticmethod
-    def build(db: VectorDatabase, workload_sample: Workload, cfg: HQIConfig = HQIConfig()) -> "HQIIndex":
+    def build(
+        db: VectorDatabase, workload_sample: Workload, cfg: Optional[HQIConfig] = None
+    ) -> "HQIIndex":
+        cfg = HQIConfig() if cfg is None else cfg
         info = BuildInfo()
         centroid_of = None
         query_centroids = None
@@ -121,70 +199,32 @@ class HQIIndex:
         info.ivf_seconds = time.perf_counter() - t0
         return HQIIndex(db, tree, partitions, cfg, coarse, info)
 
-    # ----------------------------------------------------------------- common
-
-    def template_bitmap(self, filt: tuple) -> np.ndarray:
-        if filt not in self._bitmap_cache:
-            self._bitmap_cache[filt] = evaluate_filter(filt, self.db)
-        return self._bitmap_cache[filt]
-
-    def clear_bitmap_cache(self):
-        self._bitmap_cache.clear()
-
-    def _routing(self, workload: Workload) -> Tuple[np.ndarray, Optional[np.ndarray]]:
-        """(template_routes bool [T, L], query_centroid_ok bool [m, L] | None)."""
-        troutes = np.stack([self.tree.route_filter(t) for t in workload.templates])
-        qcent_ok = None
-        if self.cfg.m > 0 and self.coarse_centroids is not None:
-            allowed = self.tree.centroid_allowed()  # [L, nc]
-            qc = km.topm_centroids(
-                workload.vectors, self.coarse_centroids, self.cfg.m, metric=self.db.metric
-            )  # [m, mfan]
-            # query ok in leaf iff any of its m centroids is allowed there
-            onehot = np.zeros((workload.m, allowed.shape[1]), dtype=bool)
-            rows = np.repeat(np.arange(workload.m), qc.shape[1])
-            onehot[rows, qc.reshape(-1)] = True
-            qcent_ok = (onehot @ allowed.T.astype(np.int64)) > 0  # [m, L]
-        return troutes, qcent_ok
-
     # ------------------------------------------------------------ batch search
 
-    def search(
+    def _engine_tasks(
         self,
         workload: Workload,
         *,
-        nprobe: Union[int, Dict[int, int]] = 8,
-        batch_vec: Union[bool, str] = True,
-    ) -> SearchResult:
-        """Batch HVQ processing (Algorithm 3 over the qd-tree partitions).
+        nprobe: Union[int, Dict[int, int]],
+        batch_vec: Union[bool, str],
+        stats: ScanStats,
+    ) -> Tuple[List[EngineTask], List[ExtraCandidates]]:
+        """Route the workload into engine tasks + host-side per-query scans.
 
-        batch_vec: True = always share posting-list matmuls; False = per-query
-        scans; "auto" = the adaptive executor the paper's §6.5 calls for —
-        batch a (template × partition) group only when it is large enough to
-        amortize the work-unit padding (PlanConfig.adaptive_crossover).
+        Every routed (template × partition) product with a non-empty bitmap
+        either joins the global plan (``EngineTask``) or — when the adaptive
+        executor deems the group too small to amortize padding — runs as
+        per-query scans whose top-ks are returned as extra merge candidates.
         """
-        m, k = workload.m, workload.k
-        stats = ScanStats()
-        troutes, qcent_ok = self._routing(workload)
-
-        run_s = np.full((m, k), -np.inf, dtype=np.float32)
-        run_i = np.full((m, k), -1, dtype=np.int64)
-
-        def merge(qidx, s_new, i_new):
-            cat_s = np.concatenate([run_s[qidx], s_new], axis=1)
-            cat_i = np.concatenate([run_i[qidx], i_new], axis=1)
-            part = np.argpartition(-cat_s, k - 1, axis=1)[:, :k]
-            s_sel = np.take_along_axis(cat_s, part, axis=1)
-            i_sel = np.take_along_axis(cat_i, part, axis=1)
-            ordr = np.argsort(-s_sel, axis=1, kind="stable")
-            run_s[qidx] = np.take_along_axis(s_sel, ordr, axis=1)
-            run_i[qidx] = np.take_along_axis(i_sel, ordr, axis=1)
-
+        troutes, qcent_ok = self.router.routes(workload)
+        tasks: List[EngineTask] = []
+        extra: List[ExtraCandidates] = []
+        k = workload.k
         for ti, filt in enumerate(workload.templates):
             q_of_t = workload.queries_for_template(ti)
             if len(q_of_t) == 0:
                 continue
-            bitmap = self.template_bitmap(filt)
+            bitmap = self.router.template_bitmap(filt)
             np_t = nprobe[ti] if isinstance(nprobe, dict) else nprobe
             for li in np.nonzero(troutes[ti])[0]:
                 part = self.partitions[li]
@@ -202,14 +242,16 @@ class HQIIndex:
                     else bool(batch_vec)
                 )
                 if use_batch:
-                    s, loc = batch_search_ivf(
-                        part.ivf,
-                        workload.vectors[qidx],
-                        nprobe=np_t,
-                        k=k,
-                        bitmap=local_bitmap,
-                        stats=stats,
-                        cfg=self.cfg.plan,
+                    packed = None
+                    if not local_bitmap.all():
+                        packed = self.arena.packed_bitmap(int(li), local_bitmap)
+                    tasks.append(
+                        EngineTask(
+                            part=int(li),
+                            qrows=qidx.astype(np.int64),
+                            nprobe=int(np_t),
+                            packed_bitmap=packed,
+                        )
                     )
                 else:
                     s = np.full((len(qidx), k), -np.inf, np.float32)
@@ -218,9 +260,39 @@ class HQIIndex:
                         s[r], loc[r] = part.ivf.search_single(
                             workload.vectors[qi], nprobe=np_t, k=k, bitmap=local_bitmap, stats=stats
                         )
-                gids = np.where(loc >= 0, part.rows[np.maximum(loc, 0)], -1)
-                merge(qidx, s, gids)
+                    gids = np.where(loc >= 0, part.rows[np.maximum(loc, 0)], -1)
+                    extra.append((qidx.astype(np.int64), s, gids))
+        return tasks, extra
 
+    def search(
+        self,
+        workload: Workload,
+        *,
+        nprobe: Union[int, Dict[int, int]] = 8,
+        batch_vec: Union[bool, str] = True,
+    ) -> SearchResult:
+        """Batch HVQ processing: one global plan, megabatched dispatch.
+
+        batch_vec: True = all vector work through the engine (at most
+        ``PlanConfig.max_bucket_shapes`` kernel dispatches per workload);
+        False = per-query scans; "auto" = the adaptive executor the paper's
+        §6.5 calls for — a (template × partition) group joins the global plan
+        only when it is large enough to amortize the work-unit padding
+        (PlanConfig.adaptive_crossover).
+        """
+        m, k = workload.m, workload.k
+        stats = ScanStats()
+        tasks, extra = self._engine_tasks(
+            workload, nprobe=nprobe, batch_vec=batch_vec, stats=stats
+        )
+        # the all-per-query path (batch_vec=False) never touches the arena
+        arena = self.arena if tasks else None
+        plan = build_plan(
+            arena, tasks, workload.vectors, m=m, k=k, cfg=self.cfg.plan, stats=stats
+        )
+        run_s, run_i = execute_plan(
+            plan, arena, workload.vectors, cfg=self.cfg.plan, extra=extra
+        )
         return SearchResult(ids=run_i, scores=run_s, tuples_scanned=stats.tuples_scanned)
 
     # ------------------------------------------------------------ online search
@@ -241,7 +313,7 @@ class HQIIndex:
 
     def tuples_routed(self, workload: Workload) -> int:
         """Σ over (query, routed partition) of |partition| — the Eq.(1) cost."""
-        troutes, qcent_ok = self._routing(workload)
+        troutes, qcent_ok = self.router.routes(workload)
         sizes = self.partition_sizes()
         total = 0
         for ti in range(len(workload.templates)):

@@ -40,6 +40,11 @@ class IVFIndex:
     order: np.ndarray  # [n] packed row -> local vector index
     offsets: np.ndarray  # [nc + 1] list boundaries in packed order
     metric: str
+    # memoized single-index PackedArena (set by arena.PackedArena.from_ivf;
+    # typed loosely to avoid a circular import)
+    _arena_cache: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False, init=False
+    )
 
     @property
     def n(self) -> int:

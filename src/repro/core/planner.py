@@ -1,49 +1,150 @@
-"""Batch execution planner — the host side of Algorithm 3.
+"""Stage 2 of the execution engine: megabatched execution of a global plan.
 
-Given a group of queries (already grouped by attribute template — Alg. 3
-line 5) and an IVF index, the planner:
+``plan.py`` (stage 1) turns a whole workload into one ``ExecutionPlan`` whose
+work units are bucketed by padded shape across every partition and template.
+This module executes that plan:
 
-  1. finds nprobe posting lists per query (line 6, one batched matmul),
-  2. inverts the (query → lists) map into per-list query groups (line 8),
-  3. packs (query-chunk × posting-list) pairs into fixed-shape *work units*
-     bucketed by padded list length (static shapes for XLA/Pallas),
-  4. executes all units of a bucket in one ``batched_masked_topk`` call —
-     the single-matmul-per-posting-list of Alg. 3 line 10, fused with the
-     Section 4.2 bitmap pushdown,
-  5. scatters per-unit top-k back to a [m, nprobe, k] tensor and reduces it
-     to the final per-query top-k (line 12's heap, as one top-k op).
+  1. for each shape bucket, gather ALL its units' posting-list rows through
+     the index-wide ``PackedArena`` (one gather serves every partition) and
+     run them in a single ``kernels.ops.workunit_topk`` dispatch — the
+     single-matmul-per-posting-list of Alg. 3 line 10, fused with the
+     Section 4.2 bitmap pushdown, megabatched across the workload;
+  2. scatter per-unit top-k into a [m, n_slots, k] candidate tensor, fold in
+     any per-query scan results the adaptive executor produced host-side;
+  3. reduce candidates to the final per-query top-k with ONE device-side
+     segmented top-k (``ops.merge_topk``) — Alg. 3 line 12 for the whole
+     workload, replacing the per-(template × partition) numpy merge loop.
 
-Every (query, posting-list) pair is evaluated exactly once and each vector
-lives in exactly one list, so results are identical to the per-query scan —
-tests assert bit-equality of the candidate sets.
+Dispatch cost is O(#buckets) ≤ ``PlanConfig.max_bucket_shapes`` instead of
+O(T×L). Every (query, posting-list) pair is evaluated exactly once and each
+vector lives in exactly one list, so results are identical to the per-query
+scan — tests assert equality of scores and candidate sets.
+
+Known scale tradeoff: the merge tensor is dense [m, n_slots, k] where
+``n_slots`` is the *max* per-query slot count over the workload, so queries
+routed to few partitions pay for the widest query's slots. At very large
+m × n_slots a segmented (ragged) candidate layout would cut peak memory —
+a natural follow-up once sharded serving (ROADMAP) lands.
+
+``batch_search_ivf`` survives as the single-index entry point (used by the
+baselines and benchmarks): it wraps the index in a one-partition arena,
+builds a one-task plan, and executes it.
 """
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Dict, List, Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from .arena import PackedArena
 from .ivf import IVFIndex, ScanStats
+from .plan import EngineTask, ExecutionPlan, PlanConfig, build_plan, _next_pow2
+
+# Extra per-query candidates merged alongside the plan's output (the adaptive
+# executor's host-side scans): (qrows i64 [mq], scores f32 [mq, k], ids i64 [mq, k])
+ExtraCandidates = Tuple[np.ndarray, np.ndarray, np.ndarray]
 
 
-def _next_pow2(x: int, lo: int = 32) -> int:
-    return max(lo, 1 << (max(1, x - 1)).bit_length())
+def execute_plan(
+    plan: ExecutionPlan,
+    arena: Optional[PackedArena],  # None allowed iff the plan has no buckets
+    q_vecs: np.ndarray,  # f32 [m, d]
+    *,
+    cfg: Optional[PlanConfig] = None,
+    extra: Sequence[ExtraCandidates] = (),
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (scores f32 [m, k] best-first, arena gids i64 [m, k]; -1 pad)."""
+    cfg = PlanConfig() if cfg is None else cfg
+    m, k, tq = plan.m, plan.k, plan.tq
+    # extras get per-query-dense slot columns after the plan's own slots
+    extra_slots = np.zeros(m, dtype=np.int64)
+    for qrows, _, _ in extra:
+        extra_slots[qrows] += 1
+    n_slots = plan.n_slots + (int(extra_slots.max()) if m else 0)
+    if m == 0 or n_slots == 0:
+        return (
+            np.full((m, k), -np.inf, np.float32),
+            np.full((m, k), -1, np.int64),
+        )
 
+    out_scores = np.full((m, n_slots, k), -np.inf, dtype=np.float32)
+    out_idx = np.full((m, n_slots, k), -1, dtype=np.int64)
+    d = q_vecs.shape[1]
 
-@dataclasses.dataclass
-class PlanConfig:
-    tq_unit: int = 64  # queries per work unit
-    min_list_pad: int = 32  # smallest padded list bucket
-    use_pallas: Optional[bool] = None  # None = ops default
-    interpret: Optional[bool] = None
-    # adaptive executor (paper §6.5): below this group size the per-query
-    # scan beats batched matmuls (Fig. 7a's crossover ≈ 100 at paper scale)
-    adaptive_crossover: int = 64
+    n_packed = arena.n if plan.buckets else 0
+    for lp in sorted(plan.buckets):
+        units = plan.buckets[lp]
+        # pad the unit count to a power of two so repeated workloads reuse a
+        # bounded set of compiled shapes (padding units are fully masked)
+        W = _next_pow2(len(units), 1)
+        Q = np.zeros((W, tq, d), dtype=np.float32)
+        Vrows = np.zeros((W, lp), dtype=np.int64)
+        valid = np.zeros((W, lp), dtype=bool)
+        qrow_of = np.full((W, tq), -1, dtype=np.int64)
+        slot_of = np.zeros((W, tq), dtype=np.int64)
+        for w, u in enumerate(units):
+            s0 = int(arena.list_start[u.glist])
+            llen = int(arena.list_len[u.glist])
+            rows = np.minimum(np.arange(lp) + s0, n_packed - 1)
+            Vrows[w] = rows
+            v_ok = np.arange(lp) < llen
+            task = plan.tasks[u.task]
+            if task.packed_bitmap is not None:
+                pb = task.packed_bitmap
+                local = np.minimum(rows - int(arena.part_row[task.part]), len(pb) - 1)
+                v_ok = v_ok & pb[local]
+            valid[w] = v_ok
+            nq = len(u.qrows)
+            Q[w, :nq] = q_vecs[u.qrows]
+            qrow_of[w, :nq] = u.qrows
+            slot_of[w, :nq] = u.slots
+        V = arena.packed[Vrows]  # [W, lp, d] — one gather across all partitions
+        s, i_loc = kops.workunit_topk(
+            jnp.asarray(Q),
+            jnp.asarray(V),
+            jnp.asarray(valid),
+            min(k, lp),
+            metric=arena.metric,
+            use_pallas=cfg.use_pallas,
+            interpret=cfg.interpret,
+        )
+        s = np.asarray(s)
+        i_loc = np.asarray(i_loc)  # index within the unit's lp rows (-1 = none)
+        kk = s.shape[-1]
+        packed_rows = np.take_along_axis(
+            np.broadcast_to(Vrows[:, None, :], i_loc.shape[:2] + (lp,)),
+            np.maximum(i_loc, 0),
+            axis=2,
+        )
+        gidx = arena.gid[packed_rows]
+        gidx = np.where(i_loc < 0, -1, gidx)
+        wmask = qrow_of >= 0  # [W, tq]
+        qr = qrow_of[wmask]
+        sl = slot_of[wmask]
+        out_scores[qr, sl, :kk] = s[wmask]
+        out_idx[qr, sl, :kk] = gidx[wmask]
+
+    next_extra = np.full(m, plan.n_slots, dtype=np.int64)
+    for qrows, es, ei in extra:
+        kk = min(k, es.shape[1])
+        slot = next_extra[qrows]
+        next_extra[qrows] += 1
+        out_scores[qrows, slot, :kk] = es[:, :kk]
+        out_idx[qrows, slot, :kk] = ei[:, :kk]
+
+    # pad the merge width to a power of two so repeated workloads reuse a
+    # bounded set of compiled merge shapes
+    flat_s = out_scores.reshape(m, -1)
+    flat_i = out_idx.reshape(m, -1)
+    width = _next_pow2(flat_s.shape[1], k)
+    if width > flat_s.shape[1]:
+        padc = width - flat_s.shape[1]
+        flat_s = np.pad(flat_s, ((0, 0), (0, padc)), constant_values=-np.inf)
+        flat_i = np.pad(flat_i, ((0, 0), (0, padc)), constant_values=-1)
+    top_s, top_i = kops.merge_topk(jnp.asarray(flat_s), jnp.asarray(flat_i), k)
+    return np.asarray(top_s, dtype=np.float32), np.asarray(top_i, dtype=np.int64)
 
 
 def batch_search_ivf(
@@ -54,113 +155,22 @@ def batch_search_ivf(
     k: int,
     bitmap: Optional[np.ndarray] = None,  # bool [n] in LOCAL vector order
     stats: Optional[ScanStats] = None,
-    cfg: PlanConfig = PlanConfig(),
+    cfg: Optional[PlanConfig] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (scores f32 [m, k] best-first, local idx int64 [m, k]; -1 pad)."""
+    """Plan + execute one IVF index: (scores f32 [m, k], local idx i64 [m, k])."""
+    cfg = PlanConfig() if cfg is None else cfg
     m = q_vecs.shape[0]
     if m == 0:
         return np.zeros((0, k), np.float32), np.zeros((0, k), np.int64)
-    nprobe = int(min(nprobe, ivf.n_lists))
-    probes = ivf.probe(q_vecs, nprobe)  # [m, nprobe]
-
-    # bitmap in packed order (posting-list entries are contiguous slices)
+    arena = PackedArena.from_ivf(ivf)
     packed_bitmap = None
     if bitmap is not None:
-        packed_bitmap = bitmap[ivf.order]
-
-    # ---- invert (query, slot) -> list groups --------------------------------
-    flat_list = probes.reshape(-1)  # [m * nprobe]
-    flat_q = np.repeat(np.arange(m, dtype=np.int64), nprobe)
-    flat_slot = np.tile(np.arange(nprobe, dtype=np.int64), m)
-    sort = np.argsort(flat_list, kind="stable")
-    flat_list, flat_q, flat_slot = flat_list[sort], flat_q[sort], flat_slot[sort]
-    uniq_lists, group_starts = np.unique(flat_list, return_index=True)
-    group_ends = np.append(group_starts[1:], len(flat_list))
-
-    # ---- build work units, bucketed by padded list length -------------------
-    buckets: Dict[Tuple[int, int], List[Tuple[int, np.ndarray, np.ndarray]]] = {}
-    tq = cfg.tq_unit
-    for l, gs, ge in zip(uniq_lists, group_starts, group_ends):
-        llen = ivf.list_len(int(l))
-        if llen == 0:
-            continue
-        lp = _next_pow2(llen, cfg.min_list_pad)
-        qs, slots = flat_q[gs:ge], flat_slot[gs:ge]
-        if stats is not None:
-            stats.tuples_scanned += llen * len(qs)
-            if packed_bitmap is not None:
-                s0 = int(ivf.offsets[l])
-                stats.dists_computed += int(packed_bitmap[s0 : s0 + llen].sum()) * len(qs)
-            else:
-                stats.dists_computed += llen * len(qs)
-        for cs in range(0, len(qs), tq):
-            buckets.setdefault((lp, tq), []).append((int(l), qs[cs : cs + tq], slots[cs : cs + tq]))
-
-    out_scores = np.full((m, nprobe, k), -np.inf, dtype=np.float32)
-    out_idx = np.full((m, nprobe, k), -1, dtype=np.int64)
-
-    n_packed = ivf.n
-    for (lp, _tq), units in buckets.items():
-        W = len(units)
-        Q = np.zeros((W, tq, q_vecs.shape[1]), dtype=np.float32)
-        Vidx = np.zeros((W, lp), dtype=np.int64)
-        valid = np.zeros((W, lp), dtype=bool)
-        qrow_of = np.full((W, tq), -1, dtype=np.int64)
-        slot_of = np.zeros((W, tq), dtype=np.int64)
-        for w, (l, qs, slots) in enumerate(units):
-            s0, e0 = int(ivf.offsets[l]), int(ivf.offsets[l + 1])
-            llen = e0 - s0
-            rows = np.arange(lp) + s0
-            rows = np.minimum(rows, n_packed - 1)
-            Vidx[w] = rows
-            v_ok = np.arange(lp) < llen
-            if packed_bitmap is not None:
-                v_ok = v_ok & packed_bitmap[rows]
-            valid[w] = v_ok
-            Q[w, : len(qs)] = q_vecs[qs]
-            qrow_of[w, : len(qs)] = qs
-            slot_of[w, : len(qs)] = slots
-        V = ivf.packed[Vidx]  # [W, lp, d]
-        s, i_loc = kops.batched_masked_topk(
-            jnp.asarray(Q),
-            jnp.asarray(V),
-            jnp.asarray(valid),
-            min(k, lp),
-            metric=ivf.metric,
-            use_pallas=cfg.use_pallas,
-            interpret=cfg.interpret,
-        )
-        s = np.asarray(s)
-        i_loc = np.asarray(i_loc)  # index within the unit's lp rows (-1 = none)
-        kk = s.shape[-1]
-        # local packed row -> local vector index
-        packed_rows = np.take_along_axis(
-            np.broadcast_to(Vidx[:, None, :], i_loc.shape[:2] + (lp,)),
-            np.maximum(i_loc, 0),
-            axis=2,
-        )
-        gidx = ivf.order[packed_rows]
-        gidx = np.where(i_loc < 0, -1, gidx)
-        # scatter to [m, nprobe, k]
-        wmask = qrow_of >= 0  # [W, tq]
-        qr = qrow_of[wmask]
-        sl = slot_of[wmask]
-        out_scores[qr, sl, :kk] = s[wmask]
-        out_idx[qr, sl, :kk] = gidx[wmask]
-
-    # ---- final per-query merge (Alg. 3 line 12) -----------------------------
-    flat_s = out_scores.reshape(m, -1)
-    flat_i = out_idx.reshape(m, -1)
-    kk = min(k, flat_s.shape[1])
-    part = np.argpartition(-flat_s, kk - 1, axis=1)[:, :kk]
-    top_s = np.take_along_axis(flat_s, part, axis=1)
-    top_i = np.take_along_axis(flat_i, part, axis=1)
-    ordr = np.argsort(-top_s, axis=1, kind="stable")
-    top_s = np.take_along_axis(top_s, ordr, axis=1)
-    top_i = np.take_along_axis(top_i, ordr, axis=1)
-    if kk < k:
-        top_s = np.pad(top_s, ((0, 0), (0, k - kk)), constant_values=-np.inf)
-        top_i = np.pad(top_i, ((0, 0), (0, k - kk)), constant_values=-1)
-    # normalize sentinels: absent results are (-inf, -1) on every path
-    top_s = np.where(top_i < 0, -np.inf, top_s)
-    return top_s.astype(np.float32), top_i.astype(np.int64)
+        packed_bitmap = arena.packed_bitmap(0, bitmap)
+    task = EngineTask(
+        part=0,
+        qrows=np.arange(m, dtype=np.int64),
+        nprobe=int(min(nprobe, ivf.n_lists)),
+        packed_bitmap=packed_bitmap,
+    )
+    plan = build_plan(arena, [task], q_vecs, m=m, k=k, cfg=cfg, stats=stats)
+    return execute_plan(plan, arena, q_vecs, cfg=cfg)

@@ -8,6 +8,7 @@ interpret mode (tests); on a real TPU fleet ``interpret=False``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import os
 
@@ -19,11 +20,46 @@ from . import ref as _ref
 _DEFAULT_PALLAS = os.environ.get("REPRO_USE_PALLAS", "0") == "1"
 _DEFAULT_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") == "1"
 
+# NV/NQ ratio above which the db-stationary grid wins (each DB tile read once
+# from HBM while every query tile's top-k stays resident in VMEM scratch)
+_DB_STATIONARY_RATIO = 4
+
 
 def set_default_backend(use_pallas: bool, interpret: bool = True) -> None:
     global _DEFAULT_PALLAS, _DEFAULT_INTERPRET
     _DEFAULT_PALLAS = use_pallas
     _DEFAULT_INTERPRET = interpret
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Process-wide kernel-dispatch accounting (see core/planner.py).
+
+    ``knn_calls`` counts similarity-scan dispatches (work-unit megabatches and
+    the legacy batched path); ``merge_calls`` counts segmented top-k merges.
+    ``shapes`` holds the distinct (W, TQ, TV, k) problem shapes seen — a proxy
+    for XLA compile-cache pressure that the engine's shape budget bounds.
+    """
+
+    knn_calls: int = 0
+    merge_calls: int = 0
+    shapes: set = dataclasses.field(default_factory=set)
+
+    def reset(self) -> None:
+        self.knn_calls = 0
+        self.merge_calls = 0
+        self.shapes = set()
+
+
+_DISPATCH = DispatchStats()
+
+
+def dispatch_stats() -> DispatchStats:
+    return _DISPATCH
+
+
+def reset_dispatch_stats() -> None:
+    _DISPATCH.reset()
 
 
 @functools.partial(jax.jit, static_argnames=("metric",))
@@ -70,18 +106,75 @@ def batched_masked_topk(
     """vmapped work-unit execution: the device side of Algorithm 3.
 
     Each work unit is a (query-group tile × posting-list tile) pair assembled
-    by the planner; one call evaluates all units in parallel.
+    by the planner; one call evaluates all units in parallel. Alias of
+    ``workunit_topk`` (the engine's entry point), kept for its callers.
     """
-    use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
-    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
-    if use_pallas:
-        from .fused_knn import fused_knn
-
-        fn = functools.partial(fused_knn, k=k, metric=metric, interpret=interpret)
-        return jax.vmap(lambda a, b, c: fn(a, b, c))(q, v, valid)
-    return _batched_masked_topk_jnp(q, v, valid, k, metric)
+    return workunit_topk(
+        q, v, valid, k, metric=metric, use_pallas=use_pallas, interpret=interpret
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "metric"))
 def _batched_masked_topk_jnp(q, v, valid, k, metric):
     return jax.vmap(lambda a, b, c: _ref.masked_topk_ref(a, b, c, k, metric))(q, v, valid)
+
+
+def workunit_topk(
+    q: jax.Array,  # [W, TQ, D]  one bucket's work units (see core/plan.py)
+    v: jax.Array,  # [W, TV, D]
+    valid: jax.Array,  # bool [W, TV]
+    k: int,
+    *,
+    metric: str = "ip",
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Work-unit entry point of the execution engine: one bucket, one dispatch.
+
+    The engine hands every work unit of a shape bucket — across all partitions
+    and templates — to a single call. On the Pallas path this picks the
+    db-stationary grid of ``fused_knn`` when the vector tile dominates the
+    query tile (NV ≫ NQ, the batch-serving shape), and the query-stationary
+    grid otherwise.
+    """
+    _DISPATCH.knn_calls += 1
+    _DISPATCH.shapes.add((q.shape[0], q.shape[1], v.shape[1], int(k)))
+    use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    if use_pallas:
+        from .fused_knn import fused_knn, fused_knn_db_stationary
+
+        if v.shape[1] >= _DB_STATIONARY_RATIO * max(int(q.shape[1]), 1):
+            fn = functools.partial(
+                fused_knn_db_stationary, k=k, metric=metric, interpret=interpret
+            )
+        else:
+            fn = functools.partial(fused_knn, k=k, metric=metric, interpret=interpret)
+        return jax.vmap(lambda a, b, c: fn(a, b, c))(q, v, valid)
+    return _batched_masked_topk_jnp(q, v, valid, k, metric)
+
+
+def merge_topk(
+    scores: jax.Array,  # f32 [m, C] — per-query candidate scores (-inf = absent)
+    idx: jax.Array,  # i64 [m, C] — candidate ids (-1 = absent)
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Device-side segmented top-k reduction over per-query candidate rows.
+
+    The engine's final cross-partition merge (Alg. 3 line 12 for the whole
+    workload): every query's candidates from every partition, template, and
+    probe slot reduce to its top-k in one op instead of a per-(template ×
+    partition) numpy merge loop.
+    """
+    _DISPATCH.merge_calls += 1
+    return _merge_topk_jnp(scores, idx, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_topk_jnp(scores, idx, k):
+    top, pos = jax.lax.top_k(scores, k)
+    out_i = jnp.take_along_axis(idx, pos.astype(idx.dtype), axis=1)
+    # normalize sentinels: absent results are (-inf, -1) on every path
+    top = jnp.where(out_i < 0, -jnp.inf, top)
+    out_i = jnp.where(jnp.isfinite(top), out_i, -1)
+    return top, out_i

@@ -1,0 +1,250 @@
+"""Plan/execute engine: parity with per-query scans, dispatch budget, edges.
+
+Covers the workload-wide execution engine (core/plan.py + core/planner.py +
+core/arena.py): results must match the per-query ``search_single`` path
+exactly across metrics, nprobe-as-dict, degenerate bitmaps, oversized k, and
+single-partition trees — while issuing a bounded number of kernel dispatches.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    HQIConfig,
+    HQIIndex,
+    PackedArena,
+    PlanConfig,
+    exhaustive_search,
+    recall_at_k,
+)
+from repro.core.ivf import IVFIndex
+from repro.core.plan import EngineTask, build_plan
+from repro.core.planner import batch_search_ivf, execute_plan
+from repro.kernels import ops
+
+from conftest import small_db, small_workload
+
+
+def _assert_same_results(a_s, a_i, b_s, b_i):
+    np.testing.assert_allclose(
+        np.where(np.isfinite(a_s), a_s, -1e30),
+        np.where(np.isfinite(b_s), b_s, -1e30),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+    for r in range(a_i.shape[0]):
+        assert set(a_i[r][a_i[r] >= 0].tolist()) == set(b_i[r][b_i[r] >= 0].tolist()), r
+
+
+@pytest.mark.parametrize("metric", ["ip", "l2"])
+def test_engine_matches_single_scan(metric):
+    """batch_search_ivf (engine) == search_single, both metrics, with bitmap."""
+    db = small_db(n=900, seed=11, metric=metric)
+    ivf = IVFIndex.build(db.vectors, metric=metric, n_centroids=16, seed=0)
+    rng = np.random.default_rng(11)
+    q = rng.normal(size=(23, db.d)).astype(np.float32)
+    bitmap = rng.random(db.n) < 0.4
+    bs, bi = batch_search_ivf(
+        ivf, q, nprobe=6, k=5, bitmap=bitmap, cfg=PlanConfig(tq_unit=8, min_list_pad=8)
+    )
+    ss = np.zeros_like(bs)
+    si = np.zeros_like(bi)
+    for r in range(q.shape[0]):
+        ss[r], si[r] = ivf.search_single(q[r], nprobe=6, k=5, bitmap=bitmap)
+    _assert_same_results(bs, bi, ss, si)
+
+
+def test_engine_parity_sweep():
+    """Seed/nprobe/bitmap sweep replacing the hypothesis property test."""
+    for seed, nprobe, with_bitmap in [(0, 1, False), (7, 3, True), (42, 12, True)]:
+        db = small_db(n=800, seed=seed)
+        ivf = IVFIndex.build(db.vectors, metric=db.metric, n_centroids=12, seed=0)
+        rng = np.random.default_rng(seed)
+        q = rng.normal(size=(17, db.d)).astype(np.float32)
+        bitmap = (rng.random(db.n) < 0.5) if with_bitmap else None
+        bs, bi = batch_search_ivf(
+            ivf, q, nprobe=nprobe, k=4, bitmap=bitmap,
+            cfg=PlanConfig(tq_unit=8, min_list_pad=8),
+        )
+        for r in range(q.shape[0]):
+            ss, si = ivf.search_single(q[r], nprobe=nprobe, k=4, bitmap=bitmap)
+            _assert_same_results(bs[r : r + 1], bi[r : r + 1], ss[None], si[None])
+
+
+@pytest.fixture(scope="module")
+def db():
+    return small_db()
+
+
+@pytest.fixture(scope="module")
+def workload(db):
+    return small_workload(db)
+
+
+@pytest.fixture(scope="module")
+def hqi(db, workload):
+    return HQIIndex.build(db, workload, HQIConfig(min_partition_size=128, max_leaves=32))
+
+
+def test_dispatch_budget(db, workload, hqi):
+    """The whole workload executes in ≤ max_bucket_shapes knn dispatches and
+    one device-side merge, with results equal to the per-query path."""
+    ops.reset_dispatch_stats()
+    rb = hqi.search(workload, nprobe=6)
+    st = ops.dispatch_stats()
+    assert 0 < st.knn_calls <= hqi.cfg.plan.max_bucket_shapes, st.knn_calls
+    assert st.merge_calls == 1
+    assert len(st.shapes) <= hqi.cfg.plan.max_bucket_shapes
+
+    ro = hqi.search_online(workload, nprobe=6)
+    _assert_same_results(rb.scores, rb.ids, ro.scores, ro.ids)
+
+
+def test_dispatch_budget_tight(db, workload):
+    """A one-shape budget still returns exact results (everything coalesces)."""
+    cfg = HQIConfig(
+        min_partition_size=128,
+        max_leaves=32,
+        plan=PlanConfig(max_bucket_shapes=1, tq_unit=16, min_list_pad=8),
+    )
+    hqi = HQIIndex.build(db, workload, cfg)
+    ops.reset_dispatch_stats()
+    rb = hqi.search(workload, nprobe=6)
+    assert ops.dispatch_stats().knn_calls == 1
+    ro = hqi.search_online(workload, nprobe=6)
+    _assert_same_results(rb.scores, rb.ids, ro.scores, ro.ids)
+
+
+def test_nprobe_dict(db, workload, hqi):
+    """Per-template nprobe dict routes through the engine unchanged."""
+    nprobe = {ti: 3 + (ti % 4) for ti in range(len(workload.templates))}
+    rb = hqi.search(workload, nprobe=nprobe)
+    ro = hqi.search_online(workload, nprobe=nprobe)
+    _assert_same_results(rb.scores, rb.ids, ro.scores, ro.ids)
+
+
+def test_all_false_bitmap(db, workload, hqi):
+    """A template matching nothing yields (-inf, -1) rows, no crash."""
+    from repro.core.predicates import Between, make_filter
+    from repro.core.types import Workload
+
+    templates = [make_filter(Between("A", 5.0, 6.0))]  # A ∈ [0, 1): empty
+    wl = Workload(
+        vectors=workload.vectors[:7],
+        templates=templates,
+        template_of=np.zeros(7, dtype=np.int32),
+        k=4,
+    )
+    res = hqi.search(wl, nprobe=6)
+    assert (res.ids == -1).all()
+    assert np.isneginf(res.scores).all()
+
+
+def test_k_exceeds_posting_lists(db):
+    """k larger than every posting list: engine pads with (-inf, -1)."""
+    ivf = IVFIndex.build(db.vectors[:300], metric=db.metric, n_centroids=32, seed=0)
+    rng = np.random.default_rng(5)
+    q = rng.normal(size=(9, db.d)).astype(np.float32)
+    k = 64  # lists average ~10 vectors
+    bs, bi = batch_search_ivf(ivf, q, nprobe=3, k=k, cfg=PlanConfig(tq_unit=4, min_list_pad=8))
+    for r in range(q.shape[0]):
+        ss, si = ivf.search_single(q[r], nprobe=3, k=k)
+        _assert_same_results(bs[r : r + 1], bi[r : r + 1], ss[None], si[None])
+    assert (bi == -1).any()  # some padding must exist
+
+
+def test_single_partition_tree(db, workload):
+    """Degenerate qd-tree (one leaf) routes everything through one partition."""
+    hqi = HQIIndex.build(
+        db, workload, HQIConfig(min_partition_size=db.n + 1, max_leaves=1)
+    )
+    assert len(hqi.partitions) == 1
+    truth = exhaustive_search(db, workload)
+    res = hqi.search(workload, nprobe=10_000)
+    assert recall_at_k(res, truth) == 1.0
+
+
+def test_adaptive_mixes_paths(db, workload, hqi):
+    """'auto' mixes engine tasks and host scans into one merged result."""
+    ra = hqi.search(workload, nprobe=6, batch_vec="auto")
+    rb = hqi.search(workload, nprobe=6, batch_vec=True)
+    _assert_same_results(ra.scores, ra.ids, rb.scores, rb.ids)
+
+
+def test_prefilter_stats_parity_with_dead_template(db):
+    """batch_vec must report the same tuples_scanned as per-query scans even
+    when a template's bitmap kills everything (the lists are still scanned)."""
+    from repro.core import PreFilterIndex
+    from repro.core.predicates import Between, make_filter
+    from repro.core.types import Workload
+
+    templates = [make_filter(Between("A", 5.0, 6.0)), make_filter(Between("A", 0.0, 0.5))]
+    rng = np.random.default_rng(0)
+    wl = Workload(
+        vectors=rng.normal(size=(30, db.d)).astype(np.float32),
+        templates=templates,
+        template_of=(np.arange(30) % 2).astype(np.int32),
+        k=5,
+    )
+    pre = PreFilterIndex.build(db)
+    r_single = pre.search(wl, nprobe=6, batch_vec=False)
+    r_batch = pre.search(wl, nprobe=6, batch_vec=True)
+    assert r_single.tuples_scanned == r_batch.tuples_scanned
+    _assert_same_results(r_batch.scores, r_batch.ids, r_single.scores, r_single.ids)
+
+
+def test_lazy_arena(db, workload):
+    """Per-query-only configurations never pay the arena concatenation."""
+    hqi = HQIIndex.build(db, workload, HQIConfig(min_partition_size=128, max_leaves=32))
+    hqi.search_online(workload, nprobe=6)
+    assert hqi._arena is None
+    hqi.search(workload, nprobe=6)
+    assert hqi._arena is not None
+
+
+def test_configs_not_shared():
+    """Mutable-default regression: each build/search gets a fresh config."""
+    db = small_db(n=400, seed=2)
+    wl = small_workload(db, n_queries=10)
+    h1 = HQIIndex.build(db, wl)
+    h2 = HQIIndex.build(db, wl)
+    assert h1.cfg is not h2.cfg
+    assert h1.cfg.plan is not h2.cfg.plan
+
+
+def test_workunit_entry_point_paths():
+    """ops.workunit_topk: pallas (query- and db-stationary) == jnp reference."""
+    rng = np.random.default_rng(9)
+    for tq, tv in [(8, 64), (64, 32)]:  # tv≫tq picks db-stationary, other not
+        q = rng.normal(size=(3, tq, 16)).astype(np.float32)
+        v = rng.normal(size=(3, tv, 16)).astype(np.float32)
+        valid = rng.random((3, tv)) < 0.7
+        s_ref, i_ref = ops.workunit_topk(q, v, valid, 4, metric="ip", use_pallas=False)
+        s_pl, i_pl = ops.workunit_topk(
+            q, v, valid, 4, metric="ip", use_pallas=True, interpret=True
+        )
+        np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_pl), rtol=1e-5, atol=1e-5)
+        for w in range(3):
+            for r in range(tq):
+                a = np.asarray(i_ref)[w, r]
+                b = np.asarray(i_pl)[w, r]
+                assert set(a[a >= 0].tolist()) == set(b[b >= 0].tolist())
+
+
+def test_plan_shape_budget_structure(db):
+    """build_plan never emits more buckets than the compile-shape budget."""
+    ivf = IVFIndex.build(db.vectors, metric=db.metric, n_centroids=64, seed=0)
+    arena = PackedArena.from_ivf(ivf)
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(50, db.d)).astype(np.float32)
+    task = EngineTask(
+        part=0, qrows=np.arange(50, dtype=np.int64), nprobe=16, packed_bitmap=None
+    )
+    for budget in (1, 2, 4):
+        plan = build_plan(
+            arena, [task], q, m=50, k=5,
+            cfg=PlanConfig(max_bucket_shapes=budget, tq_unit=8, min_list_pad=8),
+        )
+        assert plan.n_dispatches <= budget
+        s, i = execute_plan(plan, arena, q, cfg=PlanConfig())
+        ss, si = batch_search_ivf(ivf, q, nprobe=16, k=5)
+        _assert_same_results(s, i, ss, si)

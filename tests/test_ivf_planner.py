@@ -1,6 +1,8 @@
 """IVF index + batch planner: structural invariants and batch==online parity."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ivf import IVFIndex, ScanStats

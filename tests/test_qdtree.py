@@ -1,6 +1,8 @@
 """qd-tree invariants: disjoint complete partitioning + routing soundness."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.predicates import evaluate_filter
