@@ -10,7 +10,7 @@ Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py).
 import os
 import sys
 
-SMOKE_SUITES = ["engine", "kernels"]
+SMOKE_SUITES = ["engine", "kernels", "service"]
 
 
 def main() -> None:
@@ -22,7 +22,7 @@ def main() -> None:
 
     from . import (
         bench_engine, bench_fig4_5, bench_fig6, bench_fig7, bench_kernels,
-        bench_table3_4, bench_table5,
+        bench_service, bench_table3_4, bench_table5,
     )
 
     suites = {
@@ -33,6 +33,7 @@ def main() -> None:
         "fig7": bench_fig7.main,
         "kernels": bench_kernels.main,
         "engine": bench_engine.main,
+        "service": bench_service.main,
     }
     picks = args or list(suites)
     print("name,us_per_call,derived")

@@ -120,6 +120,58 @@ class PackedArena:
         )
 
     @staticmethod
+    def updated(
+        old: "PackedArena",
+        parts: Sequence[Tuple[np.ndarray, IVFIndex]],
+        changed: Sequence[int],
+    ) -> "PackedArena":
+        """Incremental rebuild after the serving layer extends some partitions.
+
+        ``parts`` is the full current partition list; only partitions in
+        ``changed`` are re-derived from their (rows, ivf) pair — every other
+        partition's packed block, id map, and posting-list table are reused
+        from ``old`` as views (no per-partition recompute), and only the
+        final concatenation is paid. Partition count and order must match.
+        """
+        assert len(parts) == old.n_parts, "partition count changed; rebuild instead"
+        changed_set = set(int(c) for c in changed)
+        packed, gid, local_of, starts, lens, cents = [], [], [], [], [], []
+        list_base = np.zeros(len(parts) + 1, dtype=np.int64)
+        part_row = np.zeros(len(parts) + 1, dtype=np.int64)
+        for p, (rows, ivf) in enumerate(parts):
+            assert ivf.metric == old.metric, "mixed-metric partitions"
+            if p in changed_set:
+                packed.append(ivf.packed)
+                gid.append(np.asarray(rows, dtype=np.int64)[ivf.order])
+                local_of.append(ivf.order)
+                starts.append(ivf.offsets[:-1].astype(np.int64) + part_row[p])
+                lens.append(np.diff(ivf.offsets).astype(np.int64))
+                n_p, nl_p = ivf.n, ivf.n_lists
+            else:
+                r0, r1 = int(old.part_row[p]), int(old.part_row[p + 1])
+                l0, l1 = int(old.list_base[p]), int(old.list_base[p + 1])
+                packed.append(old.packed[r0:r1])
+                gid.append(old.gid[r0:r1])
+                local_of.append(old.local_of[r0:r1])
+                starts.append(old.list_start[l0:l1] - r0 + part_row[p])
+                lens.append(old.list_len[l0:l1])
+                n_p, nl_p = r1 - r0, l1 - l0
+            cents.append(ivf.centroids)
+            list_base[p + 1] = list_base[p] + nl_p
+            part_row[p + 1] = part_row[p] + n_p
+        return PackedArena(
+            packed=np.concatenate(packed, axis=0),
+            gid=np.concatenate(gid),
+            local_of=np.concatenate(local_of),
+            list_start=np.concatenate(starts),
+            list_len=np.concatenate(lens),
+            list_base=list_base,
+            part_row=part_row,
+            centroids=cents,
+            metric=old.metric,
+        )
+
+    @staticmethod
     def from_ivf(ivf: IVFIndex) -> "PackedArena":
         """Single-index arena; ``gid`` is the ivf-local vector index.
 

@@ -208,6 +208,7 @@ class HQIIndex:
         nprobe: Union[int, Dict[int, int]],
         batch_vec: Union[bool, str],
         stats: ScanStats,
+        live_mask: Optional[np.ndarray] = None,
     ) -> Tuple[List[EngineTask], List[ExtraCandidates]]:
         """Route the workload into engine tasks + host-side per-query scans.
 
@@ -215,6 +216,10 @@ class HQIIndex:
         either joins the global plan (``EngineTask``) or — when the adaptive
         executor deems the group too small to amortize padding — runs as
         per-query scans whose top-ks are returned as extra merge candidates.
+
+        ``live_mask`` (bool [db.n]) is the serving layer's tombstone filter:
+        it is ANDed into every template bitmap *after* the cache lookup, so
+        deletes never invalidate the Router's bitmap cache.
         """
         troutes, qcent_ok = self.router.routes(workload)
         tasks: List[EngineTask] = []
@@ -225,6 +230,8 @@ class HQIIndex:
             if len(q_of_t) == 0:
                 continue
             bitmap = self.router.template_bitmap(filt)
+            if live_mask is not None:
+                bitmap = bitmap & live_mask
             np_t = nprobe[ti] if isinstance(nprobe, dict) else nprobe
             for li in np.nonzero(troutes[ti])[0]:
                 part = self.partitions[li]
@@ -254,12 +261,10 @@ class HQIIndex:
                         )
                     )
                 else:
-                    s = np.full((len(qidx), k), -np.inf, np.float32)
-                    loc = np.full((len(qidx), k), -1, np.int64)
-                    for r, qi in enumerate(qidx):
-                        s[r], loc[r] = part.ivf.search_single(
-                            workload.vectors[qi], nprobe=np_t, k=k, bitmap=local_bitmap, stats=stats
-                        )
+                    s, loc = part.ivf.search_group(
+                        workload.vectors[qidx], nprobe=np_t, k=k,
+                        bitmap=local_bitmap, stats=stats,
+                    )
                     gids = np.where(loc >= 0, part.rows[np.maximum(loc, 0)], -1)
                     extra.append((qidx.astype(np.int64), s, gids))
         return tasks, extra
@@ -270,6 +275,7 @@ class HQIIndex:
         *,
         nprobe: Union[int, Dict[int, int]] = 8,
         batch_vec: Union[bool, str] = True,
+        live_mask: Optional[np.ndarray] = None,
     ) -> SearchResult:
         """Batch HVQ processing: one global plan, megabatched dispatch.
 
@@ -279,11 +285,15 @@ class HQIIndex:
         §6.5 calls for — a (template × partition) group joins the global plan
         only when it is large enough to amortize the work-unit padding
         (PlanConfig.adaptive_crossover).
+
+        live_mask: optional bool [db.n] of rows still alive — the serving
+        layer's tombstones; dead rows are excluded from every result exactly.
         """
         m, k = workload.m, workload.k
         stats = ScanStats()
         tasks, extra = self._engine_tasks(
-            workload, nprobe=nprobe, batch_vec=batch_vec, stats=stats
+            workload, nprobe=nprobe, batch_vec=batch_vec, stats=stats,
+            live_mask=live_mask,
         )
         # the all-per-query path (batch_vec=False) never touches the arena
         arena = self.arena if tasks else None
@@ -302,9 +312,68 @@ class HQIIndex:
         workload: Workload,
         *,
         nprobe: Union[int, Dict[int, int]] = 8,
+        live_mask: Optional[np.ndarray] = None,
     ) -> SearchResult:
         """One query at a time (workload-aware index w/o batching, Section 6.5)."""
-        return self.search(workload, nprobe=nprobe, batch_vec=False)
+        return self.search(workload, nprobe=nprobe, batch_vec=False, live_mask=live_mask)
+
+    # ------------------------------------------------------------ live updates
+
+    def invalidate_caches(self) -> None:
+        """Drop every derived structure that depends on DB contents.
+
+        The serving layer calls this after any mutation that changes row
+        count or vector contents: the Router's template bitmaps are length-
+        [db.n] and the arena holds a copy of every partition's packed
+        vectors, so both must be rebuilt. (Pure deletes don't need this —
+        they flow through ``live_mask`` at search time.)
+        """
+        self.router.clear_cache()
+        self._arena = None
+
+    def extend(self, new_db: VectorDatabase) -> np.ndarray:
+        """Fold freshly inserted tuples into the existing partitioning.
+
+        The serving layer's ``refresh()`` path: routes each new tuple to its
+        unique qd-tree leaf (semantic-description membership, no Algorithm-1
+        re-run), assigns it to that partition's nearest existing posting list
+        (``IVFIndex.extend`` — no k-means), and incrementally rebuilds the
+        arena reusing unchanged partitions. The qd-tree structure itself is a
+        build-time artifact mined from the historical workload and is kept.
+
+        Returns the new tuples' global row ids (``old_n .. old_n + new - 1``).
+        The Router bitmap cache is always invalidated (bitmaps are [db.n]).
+        """
+        n0 = self.db.n
+        new_rows = n0 + np.arange(new_db.n, dtype=np.int64)
+        if new_db.n == 0:
+            return new_rows
+        cent_new = None
+        if self.cfg.m > 0 and self.coarse_centroids is not None:
+            cent_new = km.assign_kmeans(
+                new_db.vectors, self.coarse_centroids, metric=self.db.metric
+            )
+        leaf_of = self.tree.route_tuples(new_db, cent_new)
+        self.db = VectorDatabase.concat(self.db, new_db)
+        self.router.db = self.db
+        self.router.clear_cache()
+        changed = []
+        for li in np.unique(leaf_of):
+            li = int(li)
+            idx = np.nonzero(leaf_of == li)[0]
+            part = self.partitions[li]
+            self.partitions[li] = Partition(
+                rows=np.concatenate([part.rows, new_rows[idx]]),
+                ivf=part.ivf.extend(new_db.vectors[idx]),
+            )
+            # keep the build-time alias (Partition.rows IS the leaf's row set)
+            self.tree.leaves[li].rows = self.partitions[li].rows
+            changed.append(li)
+        if self._arena is not None:
+            self._arena = PackedArena.updated(
+                self._arena, [(p.rows, p.ivf) for p in self.partitions], changed
+            )
+        return new_rows
 
     # ------------------------------------------------------------------ stats
 

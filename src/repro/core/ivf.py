@@ -89,6 +89,40 @@ class IVFIndex:
             metric=metric,
         )
 
+    def extend(self, vectors: np.ndarray) -> "IVFIndex":
+        """New index with ``vectors`` appended to the existing posting lists.
+
+        The incremental-insert path of the serving layer's ``refresh()``: the
+        quantizer (centroids) is kept, each new vector is assigned to its
+        nearest existing list, and the packed layout is re-sorted so lists
+        stay contiguous. New vectors get local indices ``n .. n+len-1`` (the
+        caller appends their ids to its row table in the same order).
+        O(n + new) repacking, no k-means.
+        """
+        vectors = np.ascontiguousarray(vectors, dtype=np.float32)
+        if vectors.shape[0] == 0:
+            return self
+        assign_new = km.assign_kmeans(vectors, self.centroids, metric=self.metric)
+        list_of_packed = np.repeat(
+            np.arange(self.n_lists, dtype=np.int64), np.diff(self.offsets)
+        )
+        all_list = np.concatenate([list_of_packed, assign_new.astype(np.int64)])
+        all_local = np.concatenate(
+            [self.order, self.n + np.arange(vectors.shape[0], dtype=np.int64)]
+        )
+        all_vecs = np.concatenate([self.packed, vectors], axis=0)
+        sort = np.argsort(all_list, kind="stable")
+        counts = np.bincount(all_list, minlength=self.n_lists)
+        offsets = np.zeros(self.n_lists + 1, dtype=np.int64)
+        offsets[1:] = np.cumsum(counts)
+        return IVFIndex(
+            centroids=self.centroids,
+            packed=np.ascontiguousarray(all_vecs[sort]),
+            order=all_local[sort],
+            offsets=offsets,
+            metric=self.metric,
+        )
+
     # -- coarse quantizer ----------------------------------------------------
 
     def probe(self, q_vecs: np.ndarray, nprobe: int) -> np.ndarray:
@@ -146,4 +180,77 @@ class IVFIndex:
         out_i = np.full(k, -1, np.int64)
         out_s[:kk] = sc[top]
         out_i[:kk] = ix[top]
+        return out_s, out_i
+
+    def search_group(
+        self,
+        q_vecs: np.ndarray,  # [mq, d]
+        *,
+        nprobe: int,
+        k: int,
+        bitmap: Optional[np.ndarray] = None,  # bool [n] in LOCAL vector order
+        stats: Optional[ScanStats] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Multi-query host-side scan — ``search_single`` for a query group.
+
+        Identical candidates and scores, but each probed posting list is
+        gathered and bitmap-filtered ONCE for every group member probing it,
+        and their distances come from one shared GEMM (``block @ Qᵀ``)
+        instead of one matvec per (query, list). This is what makes the
+        serving layer's micro-batches pay even on the adaptive executor's
+        host path: queries of one template probing overlapping lists share
+        the scan. Returns (scores f32 [mq, k] desc, local idx i64 [mq, k]).
+        """
+        mq = q_vecs.shape[0]
+        out_s = np.full((mq, k), -np.inf, np.float32)
+        out_i = np.full((mq, k), -1, np.int64)
+        if mq == 0:
+            return out_s, out_i
+        probes = self.probe(q_vecs, nprobe)  # [mq, np_eff]
+        np_eff = probes.shape[1]
+        flat_l = probes.reshape(-1).astype(np.int64)
+        flat_q = np.repeat(np.arange(mq, dtype=np.int64), np_eff)
+        order = np.argsort(flat_l, kind="stable")
+        flat_l, flat_q = flat_l[order], flat_q[order]
+        uniq, starts = np.unique(flat_l, return_index=True)
+        ends = np.append(starts[1:], len(flat_l))
+        cand_s: list = [[] for _ in range(mq)]
+        cand_i: list = [[] for _ in range(mq)]
+        qn = (q_vecs * q_vecs).sum(axis=1) if self.metric == METRIC_L2 else None
+        for l, g0, g1 in zip(uniq, starts, ends):
+            s, e = int(self.offsets[l]), int(self.offsets[l + 1])
+            if e == s:
+                continue
+            qs = flat_q[g0:g1]
+            members = self.order[s:e]
+            if stats is not None:
+                stats.tuples_scanned += (e - s) * len(qs)
+            if bitmap is not None:
+                sel = bitmap[members]
+                if not sel.any():
+                    continue
+                members = members[sel]
+                block = self.packed[s:e][sel]
+            else:
+                block = self.packed[s:e]
+            if stats is not None:
+                stats.dists_computed += block.shape[0] * len(qs)
+            ip = block @ q_vecs[qs].T  # [n_block, |qs|] — one GEMM per list
+            if self.metric == METRIC_L2:
+                sc = 2.0 * ip - (block * block).sum(axis=1)[:, None] - qn[qs][None, :]
+            else:
+                sc = ip
+            for col, qi in enumerate(qs):
+                cand_s[qi].append(sc[:, col])
+                cand_i[qi].append(members)
+        for qi in range(mq):
+            if not cand_s[qi]:
+                continue
+            sc = np.concatenate(cand_s[qi])
+            ix = np.concatenate(cand_i[qi])
+            kk = min(k, len(sc))
+            top = np.argpartition(-sc, kk - 1)[:kk]
+            top = top[np.argsort(-sc[top], kind="stable")]
+            out_s[qi, :kk] = sc[top]
+            out_i[qi, :kk] = ix[top]
         return out_s, out_i

@@ -121,6 +121,37 @@ class QDTree:
                     allowed[li] &= mask
         return allowed
 
+    def route_tuples(
+        self, db: VectorDatabase, centroid_of: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """int64 [db.n]: the unique leaf each tuple belongs to.
+
+        Each leaf's semantic description is exactly its root-to-leaf path:
+        every left turn contributes an all_true_or set S (the tuple satisfies
+        ⋁S) and every right turn contributes |S| all_false predicates (the
+        tuple satisfies none of them). Since each split partitions its node
+        on ⋁S, the descriptions partition tuple space — this is how the
+        serving layer's ``refresh()`` folds freshly inserted tuples into the
+        existing partitioning without re-running Algorithm 1.
+        """
+        n = db.n
+        if not self.preds or len(self.leaves) == 1:
+            return np.zeros(n, dtype=np.int64)
+        pm = np.stack([p.evaluate(db, centroid_of) for p in self.preds])  # [C, n]
+        out = np.full(n, -1, dtype=np.int64)
+        for li, leaf in enumerate(self.leaves):
+            mask = out < 0
+            for c in leaf.all_false:
+                mask &= ~pm[c]
+            for S in leaf.all_true_or:
+                acc = np.zeros(n, dtype=bool)
+                for s in S:
+                    acc |= pm[s]
+                mask &= acc
+            out[mask] = li
+        assert (out >= 0).all(), "leaf descriptions must cover tuple space"
+        return out
+
 
 def predicates_disjoint(p: Predicate, q: Predicate) -> bool:
     """Conservative: True only if p ∧ q is provably unsatisfiable."""
@@ -144,7 +175,9 @@ def predicates_disjoint(p: Predicate, q: Predicate) -> bool:
         if q.op in ("<", "<="):
             return p.lo > q.value or (q.op == "<" and p.lo >= q.value)
         if q.op in (">", ">="):
-            return p.hi <= q.value or (q.op == ">" and p.hi <= q.value + 0)
+            # [lo, hi) lies entirely at or below q.value in both cases: every
+            # range member is < hi <= q.value, so none is > (or >=) q.value
+            return p.hi <= q.value
     if isinstance(q, Between) and isinstance(p, Cmp):
         return predicates_disjoint(q, p)
     return False

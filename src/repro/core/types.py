@@ -70,6 +70,26 @@ class Column:
         null_mask = ~membership.any(axis=1)
         return Column(name, SETCAT, membership, null_mask)
 
+    @staticmethod
+    def concat(a: "Column", b: "Column") -> "Column":
+        """Row-wise concatenation (schema must match) — the live-insert path."""
+        assert a.kind == b.kind and a.name == b.name, (a.name, b.name)
+        if a.kind == SETCAT:
+            assert a.values.shape[1] == b.values.shape[1], "setcat cardinality"
+        values = np.concatenate([a.values, b.values], axis=0)
+        return Column(a.name, a.kind, values, np.concatenate([a.null_mask, b.null_mask]))
+
+    @staticmethod
+    def all_null(like: "Column", n: int) -> "Column":
+        """n rows of NULL with ``like``'s schema (inserts omitting a column)."""
+        if like.kind == SETCAT:
+            values = np.zeros((n, like.values.shape[1]), dtype=bool)
+        elif like.kind == CATEGORICAL:
+            values = np.full(n, -1, dtype=np.int32)
+        else:
+            values = np.zeros(n, dtype=np.float32)
+        return Column(like.name, like.kind, values, np.ones(n, dtype=bool))
+
 
 # ---------------------------------------------------------------------------
 # Vector database
@@ -111,6 +131,19 @@ class VectorDatabase:
             columns={k: c.take(idx) for k, c in self.columns.items()},
             metric=self.metric,
             ids=self.ids[idx],
+        )
+
+    @staticmethod
+    def concat(a: "VectorDatabase", b: "VectorDatabase") -> "VectorDatabase":
+        """Row-wise concatenation of two same-schema databases (live inserts)."""
+        assert a.metric == b.metric, "mixed-metric concat"
+        assert set(a.columns) == set(b.columns), "schema mismatch"
+        assert a.d == b.d, "dimension mismatch"
+        return VectorDatabase(
+            vectors=np.concatenate([a.vectors, b.vectors], axis=0),
+            columns={k: Column.concat(c, b.columns[k]) for k, c in a.columns.items()},
+            metric=a.metric,
+            ids=np.concatenate([a.ids, b.ids]),
         )
 
 

@@ -165,7 +165,6 @@ def kg_style(
     # Build candidate predicates, then calibrate each template to its target
     # selectivity by intersecting with a popularity range.
     def calibrated(base: tuple, target: float) -> tuple:
-        base_mask = np.ones(n, dtype=bool)
         from .predicates import evaluate_filter
 
         base_mask = evaluate_filter(base, db)

@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -39,16 +40,42 @@ class DispatchStats:
     the legacy batched path); ``merge_calls`` counts segmented top-k merges.
     ``shapes`` holds the distinct (W, TQ, TV, k) problem shapes seen — a proxy
     for XLA compile-cache pressure that the engine's shape budget bounds.
+
+    Thread-safe: the serving layer's scheduler thread (repro.service) and
+    foreground callers both dispatch kernels, so all mutation goes through a
+    lock; read a consistent copy with ``snapshot()``.
     """
 
     knn_calls: int = 0
     merge_calls: int = 0
     shapes: set = dataclasses.field(default_factory=set)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
+
+    def record_knn(self, shape: tuple) -> None:
+        with self._lock:
+            self.knn_calls += 1
+            self.shapes.add(shape)
+
+    def record_merge(self) -> None:
+        with self._lock:
+            self.merge_calls += 1
 
     def reset(self) -> None:
-        self.knn_calls = 0
-        self.merge_calls = 0
-        self.shapes = set()
+        with self._lock:
+            self.knn_calls = 0
+            self.merge_calls = 0
+            self.shapes = set()
+
+    def snapshot(self) -> "DispatchStats":
+        """Consistent point-in-time copy (counters + shape set)."""
+        with self._lock:
+            return DispatchStats(
+                knn_calls=self.knn_calls,
+                merge_calls=self.merge_calls,
+                shapes=set(self.shapes),
+            )
 
 
 _DISPATCH = DispatchStats()
@@ -137,8 +164,7 @@ def workunit_topk(
     query tile (NV ≫ NQ, the batch-serving shape), and the query-stationary
     grid otherwise.
     """
-    _DISPATCH.knn_calls += 1
-    _DISPATCH.shapes.add((q.shape[0], q.shape[1], v.shape[1], int(k)))
+    _DISPATCH.record_knn((q.shape[0], q.shape[1], v.shape[1], int(k)))
     use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
     interpret = _DEFAULT_INTERPRET if interpret is None else interpret
     if use_pallas:
@@ -166,7 +192,7 @@ def merge_topk(
     probe slot reduce to its top-k in one op instead of a per-(template ×
     partition) numpy merge loop.
     """
-    _DISPATCH.merge_calls += 1
+    _DISPATCH.record_merge()
     return _merge_topk_jnp(scores, idx, k)
 
 

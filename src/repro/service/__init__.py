@@ -1,0 +1,12 @@
+"""Online HVQ serving subsystem (scheduler → engine → delta merge).
+
+Public API:
+    HQIService / ServiceConfig / QueryHandle / QueueFull — the facade
+    MicroBatchScheduler — deadline/size-triggered micro-batching
+    DeltaStore — live inserts + tombstone deletes + refresh fold
+    ServiceTelemetry — p50/p99 latency, queue depth, dispatch accounting
+"""
+from .delta import DeltaStore  # noqa: F401
+from .scheduler import MicroBatchScheduler, PendingQuery  # noqa: F401
+from .service import HQIService, QueryHandle, QueueFull, ServiceConfig  # noqa: F401
+from .telemetry import FlushRecord, ServiceTelemetry  # noqa: F401

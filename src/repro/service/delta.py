@@ -1,0 +1,188 @@
+"""DeltaStore — the freshness layer: live inserts, tombstone deletes, refresh.
+
+The main ``HQIIndex`` is a build-time artifact; a serving system cannot
+rebuild it per write. The DeltaStore makes writes visible immediately:
+
+  * **inserts** append to a small side buffer (schema checked against the
+    base DB; omitted columns become NULL). Every flush brute-force scans the
+    buffer's live rows with the same fused masked-top-k kernel the engine
+    uses (``kernels.ops.workunit_topk``, one dispatch per flush with one work
+    unit per template) and the service folds those candidates into the final
+    ``merge_topk`` — so answers always reflect the live DB.
+  * **deletes** are tombstones: delta rows are dropped from the scan, indexed
+    rows are excluded through the ``live_mask`` the service passes to
+    ``HQIIndex.search``. Either way exact, no over-fetch heuristics.
+  * **refresh()** (driven by the service) folds the buffer into the main
+    index via ``HQIIndex.extend`` — qd-tree leaf routing by semantic
+    description, incremental IVF append, incremental arena rebuild — and
+    clears the buffer. Global ids are stable: delta row ids continue the
+    index's row numbering, so a fold changes *where* a tuple lives, never its
+    id. Tombstoned delta rows are folded too (as dead rows under the live
+    mask) to keep ids dense; a future compaction pass can reclaim them.
+
+Brute force over the buffer is the right trade: the buffer stays small
+between refreshes (it is the write working set), so one fused scan costs less
+than maintaining a second index, and the scan shares the engine's padded
+power-of-two shapes so it reuses compiled kernels across flushes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ivf import ScanStats
+from ..core.plan import _next_pow2
+from ..core.predicates import evaluate_filter
+from ..core.types import CATEGORICAL, Column, NUMERIC, SETCAT, VectorDatabase, Workload
+from ..kernels import ops as kops
+
+
+class DeltaStore:
+    """Append buffer + tombstones over a base schema; ids start at first_id."""
+
+    def __init__(self, schema_db: VectorDatabase, first_id: int) -> None:
+        self._schema = schema_db  # schema donor only; rows never touched
+        self.first_id = int(first_id)
+        self._db: Optional[VectorDatabase] = None
+        self._dead = np.zeros(0, dtype=bool)
+
+    @property
+    def n(self) -> int:
+        """Buffered rows, dead included (ids first_id .. first_id + n - 1)."""
+        return 0 if self._db is None else self._db.n
+
+    @property
+    def n_live(self) -> int:
+        return int((~self._dead).sum())
+
+    # ---------------------------------------------------------------- writes
+
+    def _make_columns(
+        self,
+        n: int,
+        columns: Optional[Dict[str, np.ndarray]],
+        null_masks: Optional[Dict[str, np.ndarray]],
+    ) -> Dict[str, Column]:
+        columns = columns or {}
+        null_masks = null_masks or {}
+        unknown = set(columns) - set(self._schema.columns)
+        assert not unknown, f"insert references unknown columns {sorted(unknown)}"
+        out: Dict[str, Column] = {}
+        for name, ref in self._schema.columns.items():
+            if name not in columns:
+                out[name] = Column.all_null(ref, n)
+                continue
+            vals = columns[name]
+            nm = null_masks.get(name)
+            if ref.kind == NUMERIC:
+                out[name] = Column.numeric(name, vals, null_mask=nm)
+            elif ref.kind == CATEGORICAL:
+                out[name] = Column.categorical(name, vals, null_mask=nm)
+            else:
+                assert ref.kind == SETCAT
+                out[name] = Column.setcat(name, vals)
+            assert out[name].n == n, f"column {name}: {out[name].n} rows, expected {n}"
+        return out
+
+    def insert(
+        self,
+        vectors: np.ndarray,
+        columns: Optional[Dict[str, np.ndarray]] = None,
+        null_masks: Optional[Dict[str, np.ndarray]] = None,
+    ) -> np.ndarray:
+        """Append rows; returns their global ids (visible to the next flush)."""
+        vectors = np.atleast_2d(np.asarray(vectors, dtype=np.float32))
+        assert vectors.shape[1] == self._schema.d, "vector dimension mismatch"
+        n = vectors.shape[0]
+        ids = self.first_id + self.n + np.arange(n, dtype=np.int64)
+        slab = VectorDatabase(
+            vectors=vectors,
+            columns=self._make_columns(n, columns, null_masks),
+            metric=self._schema.metric,
+            ids=ids,
+        )
+        self._db = slab if self._db is None else VectorDatabase.concat(self._db, slab)
+        self._dead = np.concatenate([self._dead, np.zeros(n, dtype=bool)])
+        return ids
+
+    def delete(self, ext_id: int) -> bool:
+        """Tombstone a buffered row; False if the id is not in the buffer."""
+        local = int(ext_id) - self.first_id
+        if 0 <= local < self.n and not self._dead[local]:
+            self._dead[local] = True
+            return True
+        return False
+
+    # ----------------------------------------------------------------- reads
+
+    def scan(
+        self,
+        workload: Workload,
+        *,
+        stats: Optional[ScanStats] = None,
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Brute-force top-k over live buffered rows, per query.
+
+        Returns (scores f32 [m, k], global ids i64 [m, k]) best-first with
+        (-inf, -1) padding, or None when no buffered row passes any filter —
+        one ``workunit_topk`` dispatch, one work unit per flush template,
+        shapes padded to powers of two for compile reuse.
+        """
+        if self._db is None or not (~self._dead).any():
+            return None
+        db = self._db
+        live = ~self._dead
+        k, m, d = workload.k, workload.m, db.d
+        groups = []  # (qidx, bitmap over buffered rows)
+        for ti, filt in enumerate(workload.templates):
+            qidx = workload.queries_for_template(ti)
+            if len(qidx) == 0:
+                continue
+            bm = evaluate_filter(filt, db) & live
+            if stats is not None:
+                stats.tuples_scanned += db.n * len(qidx)
+                stats.dists_computed += int(bm.sum()) * len(qidx)
+            if bm.any():
+                groups.append((qidx, bm))
+        if not groups:
+            return None
+        W = len(groups)
+        TQ = _next_pow2(max(len(q) for q, _ in groups), 1)
+        TV = _next_pow2(db.n, 8)
+        Q = np.zeros((W, TQ, d), dtype=np.float32)
+        V = np.zeros((W, TV, d), dtype=np.float32)
+        valid = np.zeros((W, TV), dtype=bool)
+        V[:, : db.n] = db.vectors
+        for w, (qidx, bm) in enumerate(groups):
+            Q[w, : len(qidx)] = workload.vectors[qidx]
+            valid[w, : db.n] = bm
+        kk = min(k, TV)
+        s, iloc = kops.workunit_topk(
+            jnp.asarray(Q), jnp.asarray(V), jnp.asarray(valid), kk, metric=db.metric
+        )
+        s = np.asarray(s)
+        iloc = np.asarray(iloc).astype(np.int64)
+        out_s = np.full((m, k), -np.inf, np.float32)
+        out_i = np.full((m, k), -1, np.int64)
+        for w, (qidx, _) in enumerate(groups):
+            nq = len(qidx)
+            out_i[qidx, :kk] = np.where(
+                iloc[w, :nq] >= 0, self.first_id + iloc[w, :nq], -1
+            )
+            out_s[qidx, :kk] = s[w, :nq]
+        out_s = np.where(out_i < 0, -np.inf, out_s)
+        return out_s, out_i
+
+    # --------------------------------------------------------------- refresh
+
+    def snapshot(self) -> Tuple[Optional[VectorDatabase], np.ndarray]:
+        """(buffered rows incl. tombstoned, live mask) — the refresh fold input."""
+        return self._db, ~self._dead.copy()
+
+    def clear(self, first_id: int) -> None:
+        """Reset after a fold; subsequent inserts continue from ``first_id``."""
+        self._db = None
+        self._dead = np.zeros(0, dtype=bool)
+        self.first_id = int(first_id)

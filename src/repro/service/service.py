@@ -1,0 +1,303 @@
+"""HQIService — the online serving facade over the PR-1 plan/execute engine.
+
+Data plane, per flush (see scheduler.py for when a flush fires):
+
+    submit() ─┐
+    submit() ─┼─▶ MicroBatchScheduler ──▶ synthetic Workload
+    submit() ─┘                               │
+                                  HQIIndex.search(batch_vec="auto",
+                                                  live_mask=tombstones)
+                                               │
+                    DeltaStore.scan (live inserts, one fused dispatch)
+                                               │
+                                  kernels.ops.merge_topk  ──▶ QueryHandle
+
+Control plane: ``insert``/``delete`` are visible to the very next flush
+(delta scan + tombstone mask); ``refresh()`` folds the delta into the main
+index partitions (``HQIIndex.extend``) and invalidates the Router bitmap
+cache and arena — never a full rebuild. Admission control bounds the pending
+queue; ``submit`` raises ``QueueFull`` beyond ``ServiceConfig.queue_bound``.
+
+The service can be driven synchronously (``tick``/``drain`` — what the
+benchmarks and tests do) or by a background thread (``start``/``stop``) with
+callers blocking on ``QueryHandle.wait()``; kernel-dispatch accounting stays
+correct either way because ``DispatchStats`` is lock-protected.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, Iterable, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.hqi import HQIIndex
+from ..core.ivf import ScanStats
+from ..core.types import VectorDatabase, Workload
+from ..kernels import ops as kops
+from .delta import DeltaStore
+from .scheduler import MicroBatchScheduler, PendingQuery
+from .telemetry import ServiceTelemetry
+
+
+class QueueFull(RuntimeError):
+    """Admission control: the pending queue is at ``queue_bound``."""
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    k: int = 10
+    nprobe: Union[int, Dict[int, int]] = 8
+    batch_vec: Union[bool, str] = "auto"  # the §6.5 adaptive executor
+    max_batch: int = 256  # size flush trigger
+    deadline_s: float = 0.005  # latency flush trigger (oldest query's wait)
+    queue_bound: int = 8192  # admission control: max pending queries
+    pad_pow2: bool = False  # pad flushes to power-of-two batch slots (TPU)
+
+
+@dataclasses.dataclass
+class QueryHandle:
+    """Caller-side future for one submitted query."""
+
+    qid: int
+    t_submit: float
+    ids: Optional[np.ndarray] = None  # i64 [k] once done (-1 padding)
+    scores: Optional[np.ndarray] = None  # f32 [k] best-first
+    t_done: float = 0.0
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False
+    )
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        return self._event.wait(timeout)
+
+    def result(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids, scores); raises if the query has not been answered yet."""
+        if not self.done:
+            raise RuntimeError(f"query {self.qid} not answered yet")
+        return self.ids, self.scores
+
+    @property
+    def latency_s(self) -> float:
+        return (self.t_done - self.t_submit) if self.done else float("nan")
+
+    def _fulfill(self, ids: np.ndarray, scores: np.ndarray, t_done: float) -> None:
+        self.ids = ids
+        self.scores = scores
+        self.t_done = t_done
+        self._event.set()
+
+
+class HQIService:
+    """Streaming HVQ service: micro-batched reads, immediately-visible writes."""
+
+    def __init__(self, index: HQIIndex, cfg: Optional[ServiceConfig] = None) -> None:
+        self.index = index
+        self.cfg = ServiceConfig() if cfg is None else cfg
+        self.scheduler = MicroBatchScheduler(
+            max_batch=self.cfg.max_batch,
+            deadline_s=self.cfg.deadline_s,
+            pad_pow2=self.cfg.pad_pow2,
+        )
+        self.delta = DeltaStore(index.db, first_id=index.db.n)
+        self.telemetry = ServiceTelemetry()
+        self._live = np.ones(index.db.n, dtype=bool)  # tombstones over indexed rows
+        # one lock for scheduler + delta + live-mask + index mutation: a flush
+        # must see a consistent DB state, and refresh() swaps structures out
+        # from under search
+        self._lock = threading.RLock()
+        self._next_qid = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop_flag = threading.Event()
+
+    # ------------------------------------------------------------ data plane
+
+    def submit(self, vector: np.ndarray, filt: tuple = ()) -> QueryHandle:
+        """Enqueue one hybrid query; answered at the next flush (tick/run)."""
+        now = time.perf_counter()
+        with self._lock:
+            if len(self.scheduler) >= self.cfg.queue_bound:
+                self.telemetry.record_rejected()
+                raise QueueFull(f"pending queue at bound {self.cfg.queue_bound}")
+            h = QueryHandle(qid=self._next_qid, t_submit=now)
+            self._next_qid += 1
+            self.scheduler.push(
+                PendingQuery(
+                    handle=h,
+                    vector=np.asarray(vector, dtype=np.float32),
+                    filt=filt,
+                    t_submit=now,
+                )
+            )
+        return h
+
+    def insert(
+        self,
+        vectors: np.ndarray,
+        columns: Optional[Dict[str, np.ndarray]] = None,
+        null_masks: Optional[Dict[str, np.ndarray]] = None,
+    ) -> np.ndarray:
+        """Add tuples to the live DB; visible to the next flush. Returns ids."""
+        with self._lock:
+            return self.delta.insert(vectors, columns, null_masks)
+
+    def delete(self, ids: Iterable[int]) -> int:
+        """Tombstone tuples by global id; visible to the next flush."""
+        n = 0
+        with self._lock:
+            for ext_id in np.atleast_1d(np.asarray(ids, dtype=np.int64)):
+                ext_id = int(ext_id)
+                if 0 <= ext_id < len(self._live):
+                    if self._live[ext_id]:
+                        self._live[ext_id] = False
+                        n += 1
+                elif self.delta.delete(ext_id):
+                    n += 1
+        return n
+
+    @property
+    def n_live(self) -> int:
+        with self._lock:
+            return int(self._live.sum()) + self.delta.n_live
+
+    def live_ids(self) -> np.ndarray:
+        """Global ids of all live tuples (indexed + delta), ascending."""
+        with self._lock:
+            base = np.nonzero(self._live)[0].astype(np.int64)
+            _, delta_live = self.delta.snapshot()
+            extra = self.delta.first_id + np.nonzero(delta_live)[0].astype(np.int64)
+        return np.concatenate([base, extra])
+
+    # --------------------------------------------------------------- refresh
+
+    def refresh(self) -> int:
+        """Fold the delta buffer into the main index partitions.
+
+        Incremental: qd-tree leaf routing for the new rows, per-partition
+        IVF append, arena update reusing unchanged partitions — no
+        Algorithm-1/k-means re-run. Invalidates the Router bitmap cache
+        (bitmaps are [db.n] and the DB grew). Tombstoned delta rows fold in
+        as dead rows so global ids stay dense. Returns #rows folded.
+        """
+        with self._lock:
+            delta_db, delta_live = self.delta.snapshot()
+            if delta_db is None:
+                return 0
+            self.index.extend(delta_db)
+            self._live = np.concatenate([self._live, delta_live])
+            self.delta.clear(first_id=self.index.db.n)
+            return delta_db.n
+
+    # ---------------------------------------------------------- serving loop
+
+    def tick(self, now: Optional[float] = None) -> int:
+        """Flush once if a trigger fired; returns #queries answered."""
+        with self._lock:
+            if not self.scheduler.ready(now):
+                return 0
+            return self._flush()
+
+    def flush(self) -> int:
+        """Force a flush of whatever is pending (ignores triggers)."""
+        with self._lock:
+            if len(self.scheduler) == 0:
+                return 0
+            return self._flush()
+
+    def drain(self) -> int:
+        """Flush until the queue is empty; returns #queries answered."""
+        total = 0
+        while True:
+            n = self.flush()
+            if n == 0:
+                return total
+            total += n
+
+    def _flush(self) -> int:
+        """One micro-batch through engine + delta + merge (lock held)."""
+        batch = self.scheduler.take()
+        depth = len(self.scheduler)
+        wl, n_real = self.scheduler.build_workload(batch, self.cfg.k)
+        before = kops.dispatch_stats().snapshot()
+        t0 = time.perf_counter()
+        ids, scores = self._answer(wl)
+        dt = time.perf_counter() - t0
+        after = kops.dispatch_stats().snapshot()
+        t_done = time.perf_counter()
+        lats = []
+        for i, pq in enumerate(batch):
+            pq.handle._fulfill(ids[i], scores[i], t_done)
+            lats.append(t_done - pq.t_submit)
+        self.telemetry.record_flush(
+            size=n_real,
+            queue_depth=depth,
+            knn_dispatches=after.knn_calls - before.knn_calls,
+            merge_dispatches=after.merge_calls - before.merge_calls,
+            seconds=dt,
+            latencies=lats,
+        )
+        return n_real
+
+    def _answer(self, wl: Workload) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids i64 [m, k], scores f32 [m, k]): engine + delta, merged."""
+        res = self.index.search(
+            wl,
+            nprobe=self.cfg.nprobe,
+            batch_vec=self.cfg.batch_vec,
+            live_mask=self._live,
+        )
+        delta_out = self.delta.scan(wl, stats=ScanStats())
+        if delta_out is None:
+            return res.ids, res.scores
+        ds, di = delta_out
+        cat_s = np.concatenate([res.scores, ds], axis=1)
+        cat_i = np.concatenate([res.ids, di], axis=1)
+        ms, mi = kops.merge_topk(jnp.asarray(cat_s), jnp.asarray(cat_i), wl.k)
+        return np.asarray(mi, dtype=np.int64), np.asarray(ms, dtype=np.float32)
+
+    # ----------------------------------------------------- background driver
+
+    def start(self, poll_s: Optional[float] = None) -> None:
+        """Run the flush loop on a background scheduler thread."""
+        assert self._thread is None, "service already running"
+        poll = self.cfg.deadline_s / 4 if poll_s is None else poll_s
+        poll = max(1e-4, float(poll))
+        self._stop_flag.clear()
+
+        def loop() -> None:
+            while not self._stop_flag.is_set():
+                if self.tick() == 0:
+                    time.sleep(poll)
+
+        self._thread = threading.Thread(target=loop, name="hqi-service", daemon=True)
+        self._thread.start()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler thread (optionally answering remaining queries)."""
+        if self._thread is None:
+            return
+        self._stop_flag.set()
+        self._thread.join()
+        self._thread = None
+        if drain:
+            self.drain()
+
+    # ------------------------------------------------------------ inspection
+
+    def snapshot_db(self) -> VectorDatabase:
+        """The live DB as a standalone VectorDatabase (offline-parity tool):
+        indexed rows + delta rows, minus tombstones, in global-id order."""
+        with self._lock:
+            delta_db, _ = self.delta.snapshot()
+            full = (
+                self.index.db
+                if delta_db is None
+                else VectorDatabase.concat(self.index.db, delta_db)
+            )
+            return full.take(self.live_ids())

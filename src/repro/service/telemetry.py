@@ -1,0 +1,109 @@
+"""Serving telemetry: latency percentiles, queue depth, dispatch accounting.
+
+Every flush records its size, the queue depth it left behind, how many kernel
+dispatches it cost (via the thread-safe ``kernels.ops.DispatchStats``
+snapshots the service takes around each flush), and the per-query
+submit→answer latencies. ``summary()`` reduces that to the numbers an
+operator watches: p50/p99 latency, mean flush size, dispatches per flush,
+peak queue depth, sustained QPS.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Deque, Dict, Sequence
+
+
+@dataclasses.dataclass
+class FlushRecord:
+    size: int  # real (non-padded) queries answered
+    queue_depth: int  # queries still pending after the flush
+    knn_dispatches: int
+    merge_dispatches: int
+    seconds: float  # wall time of the flush's answer pipeline
+
+
+class ServiceTelemetry:
+    """Thread-safe accumulator shared by the scheduler thread and callers.
+
+    Percentiles are computed over a bounded window of the most recent
+    ``window`` latencies / flushes (a long-lived service must not grow
+    memory with uptime); totals (query/flush/dispatch counts, busy time)
+    are running sums over the whole lifetime.
+    """
+
+    def __init__(self, window: int = 65_536) -> None:
+        self._lock = threading.Lock()
+        self._latencies: Deque[float] = deque(maxlen=window)
+        self._flushes: Deque[FlushRecord] = deque(maxlen=max(1, window // 16))
+        self._rejected = 0
+        # lifetime totals (windows above are for percentiles/recent stats)
+        self._n_queries = 0
+        self._n_flushes = 0
+        self._busy_s = 0.0
+        self._knn = 0
+        self._merge = 0
+        self._size_sum = 0
+        self._max_depth = 0
+
+    # ------------------------------------------------------------- recording
+
+    def record_flush(
+        self,
+        *,
+        size: int,
+        queue_depth: int,
+        knn_dispatches: int,
+        merge_dispatches: int,
+        seconds: float,
+        latencies: Sequence[float],
+    ) -> None:
+        with self._lock:
+            self._flushes.append(
+                FlushRecord(size, queue_depth, knn_dispatches, merge_dispatches, seconds)
+            )
+            self._latencies.extend(float(x) for x in latencies)
+            self._n_queries += len(latencies)
+            self._n_flushes += 1
+            self._busy_s += seconds
+            self._knn += knn_dispatches
+            self._merge += merge_dispatches
+            self._size_sum += size
+            self._max_depth = max(self._max_depth, queue_depth)
+
+    def record_rejected(self) -> None:
+        with self._lock:
+            self._rejected += 1
+
+    # --------------------------------------------------------------- reading
+
+    def latency_percentile(self, q: float) -> float:
+        """Latency percentile in seconds; q in [0, 100]. 0.0 when empty."""
+        with self._lock:
+            lats = list(self._latencies)
+        if not lats:
+            return 0.0
+        lats.sort()
+        # nearest-rank percentile: no numpy dependency needed host-side, and
+        # p99 of small samples stays an observed value rather than an
+        # interpolation between two
+        rank = min(len(lats) - 1, max(0, int(round(q / 100.0 * (len(lats) - 1)))))
+        return lats[rank]
+
+    def summary(self) -> Dict[str, float]:
+        with self._lock:
+            n_q, n_f = self._n_queries, self._n_flushes
+            out: Dict[str, float] = {
+                "queries": float(n_q),
+                "flushes": float(n_f),
+                "rejected": float(self._rejected),
+                "mean_flush_size": (self._size_sum / n_f) if n_f else 0.0,
+                "max_queue_depth": float(self._max_depth),
+                "knn_dispatches_per_flush": (self._knn / n_f) if n_f else 0.0,
+                "merge_dispatches_per_flush": (self._merge / n_f) if n_f else 0.0,
+                "busy_qps": (n_q / self._busy_s) if self._busy_s > 0 else 0.0,
+            }
+        out["p50_latency_s"] = self.latency_percentile(50.0)
+        out["p99_latency_s"] = self.latency_percentile(99.0)
+        return out

@@ -1,0 +1,53 @@
+"""Boundary unit tests for predicate disjointness (Between vs Cmp).
+
+Unlike test_qdtree.py these are plain unit tests (no hypothesis) so they run
+even without the [test] extra. ``predicates_disjoint`` must be conservative:
+True only when p ∧ q is provably unsatisfiable — a false True silently drops
+results through semantic-description routing.
+"""
+import pytest
+
+from repro.core.predicates import Between, Cmp
+from repro.core.qdtree import predicates_disjoint
+
+
+B = Between("A", 0.0, 1.0)  # matches [0, 1)
+
+
+@pytest.mark.parametrize(
+    "cmp_, expect",
+    [
+        # op ">": range is < hi, so disjoint iff hi <= value
+        (Cmp("A", ">", 1.0), True),  # (1, inf) vs [0, 1): boundary, disjoint
+        (Cmp("A", ">", 0.999), False),  # x = 0.9995 satisfies both
+        (Cmp("A", ">", -1.0), False),
+        # op ">=": [1, inf) vs [0, 1) share no point (hi exclusive)
+        (Cmp("A", ">=", 1.0), True),
+        (Cmp("A", ">=", 0.999), False),  # x = 0.9995 satisfies both
+        # op "<": (-inf, 0) vs [0, 1): boundary, disjoint
+        (Cmp("A", "<", 0.0), True),
+        (Cmp("A", "<", 0.001), False),  # x = 0.0005 satisfies both
+        # op "<=": x = 0.0 satisfies both — NOT disjoint at the boundary
+        (Cmp("A", "<=", 0.0), False),
+        (Cmp("A", "<=", -0.001), True),
+        # op "==": inside vs outside the half-open interval
+        (Cmp("A", "==", 0.5), False),
+        (Cmp("A", "==", 0.0), False),  # lo is inclusive
+        (Cmp("A", "==", 1.0), True),  # hi is exclusive
+        (Cmp("A", "==", -0.5), True),
+    ],
+)
+def test_between_vs_cmp_boundaries(cmp_, expect):
+    assert predicates_disjoint(B, cmp_) is expect
+    # symmetric dispatch (Cmp, Between) must agree
+    assert predicates_disjoint(cmp_, B) is expect
+
+
+def test_different_attrs_never_disjoint():
+    assert not predicates_disjoint(B, Cmp("B", ">", 5.0))
+
+
+def test_between_vs_between_boundaries():
+    assert predicates_disjoint(B, Between("A", 1.0, 2.0))  # touching: disjoint
+    assert not predicates_disjoint(B, Between("A", 0.999, 2.0))
+    assert predicates_disjoint(Between("A", -1.0, 0.0), B)

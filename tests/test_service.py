@@ -1,0 +1,265 @@
+"""Online serving subsystem: offline parity, freshness, invalidation, triggers.
+
+The load-bearing guarantee: every answer from ``HQIService`` micro-batched
+flushes — including answers produced after interleaved inserts/deletes and
+across a ``refresh()`` fold — exactly equals an offline ``HQIIndex.search``
+over the equivalent DB snapshot. Exactness is checked in exhaustive mode
+(nprobe larger than any partition's list count), where sound routing makes
+both sides the true filtered top-k regardless of index layout.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import HQIConfig, HQIIndex, exhaustive_search
+from repro.core.types import VectorDatabase, Workload
+from repro.kernels import ops
+from repro.service import (
+    DeltaStore,
+    HQIService,
+    MicroBatchScheduler,
+    PendingQuery,
+    QueueFull,
+    ServiceConfig,
+)
+
+from conftest import small_db, small_workload
+
+EXACT = 10_000  # nprobe past every list count: search becomes exact
+
+
+def _assert_same_results(a_s, a_i, b_s, b_i):
+    np.testing.assert_allclose(
+        np.where(np.isfinite(a_s), a_s, -1e30),
+        np.where(np.isfinite(b_s), b_s, -1e30),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+    for r in range(a_i.shape[0]):
+        assert set(a_i[r][a_i[r] >= 0].tolist()) == set(b_i[r][b_i[r] >= 0].tolist()), r
+
+
+def _service(db, wl, **cfg_kw):
+    hqi = HQIIndex.build(db, wl, HQIConfig(min_partition_size=128, max_leaves=16))
+    kw = dict(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0)
+    kw.update(cfg_kw)
+    return HQIService(hqi, ServiceConfig(**kw))
+
+
+def _stream(svc, wl):
+    """Submit the whole workload, drain, and return stacked (ids, scores)."""
+    handles = [
+        svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]]) for i in range(wl.m)
+    ]
+    answered = svc.drain()
+    assert answered == wl.m
+    assert all(h.done for h in handles)
+    return np.stack([h.ids for h in handles]), np.stack([h.scores for h in handles])
+
+
+def _offline(svc, wl):
+    """Ground truth: offline HQIIndex.search over the live-DB snapshot."""
+    snap = svc.snapshot_db()
+    live = svc.live_ids()
+    offline = HQIIndex.build(snap, wl, HQIConfig(min_partition_size=128, max_leaves=16))
+    res = offline.search(wl, nprobe=EXACT)
+    ids = np.where(res.ids >= 0, live[np.maximum(res.ids, 0)], -1)
+    return ids, res.scores
+
+
+@pytest.fixture(scope="module")
+def db():
+    return small_db(n=1500, seed=5)
+
+
+@pytest.fixture(scope="module")
+def workload(db):
+    return small_workload(db, n_queries=48)
+
+
+def test_service_parity_across_writes_and_refresh(db, workload):
+    """Service flushes == offline search on the equivalent snapshot, through
+    an interleaved insert/delete + refresh() cycle and a second delta cycle —
+    without a full index rebuild per query (partition count stays fixed)."""
+    svc = _service(db, workload)
+    n_parts = len(svc.index.partitions)
+
+    got = _stream(svc, workload)
+    exp = _offline(svc, workload)
+    _assert_same_results(got[1], got[0], exp[1], exp[0])
+
+    # interleave writes: inserts near existing vectors (so they rank), deletes
+    # of base and delta rows
+    rng = np.random.default_rng(7)
+    newv = db.vectors[rng.integers(0, db.n, 120)] + 0.01 * rng.normal(
+        size=(120, db.d)
+    ).astype(np.float32)
+    cols = {
+        "A": rng.random(120).astype(np.float32),
+        "B": rng.random(120).astype(np.float32),
+        "cat": rng.integers(0, 8, 120).astype(np.int32),
+        "tags": rng.random((120, 6)) < 0.5,
+    }
+    ids = svc.insert(newv, cols)
+    assert ids[0] == db.n  # global ids continue the index's row numbering
+    svc.delete(rng.integers(0, db.n, 60))
+    svc.delete(ids[:10])
+
+    got = _stream(svc, workload)  # delta live, not folded yet
+    exp = _offline(svc, workload)
+    _assert_same_results(got[1], got[0], exp[1], exp[0])
+
+    assert svc.refresh() == 120
+    assert len(svc.index.partitions) == n_parts  # extended, not rebuilt
+    got = _stream(svc, workload)  # post-fold
+    exp = _offline(svc, workload)
+    _assert_same_results(got[1], got[0], exp[1], exp[0])
+
+    # a second insert/delete cycle against the refreshed index, with partial
+    # columns (missing ones become NULL and must fail NotNull filters)
+    svc.insert(newv[:30], columns={"A": cols["A"][:30]})
+    svc.delete([db.n + 120, db.n + 121])
+    got = _stream(svc, workload)
+    exp = _offline(svc, workload)
+    _assert_same_results(got[1], got[0], exp[1], exp[0])
+
+
+def test_refresh_invalidates_router_cache_and_arena(db, workload):
+    """refresh() must clear the Router bitmap cache and grow the arena."""
+    svc = _service(db, workload)
+    hqi = svc.index
+    hqi.search(workload, nprobe=4)  # populate bitmap cache + arena
+    assert hqi.router._bitmap_cache and hqi._arena is not None
+    n0 = hqi.arena.n
+
+    svc.insert(np.zeros((5, db.d), dtype=np.float32))
+    assert svc.refresh() == 5
+    assert hqi.router._bitmap_cache == {}  # stale [old_n] bitmaps dropped
+    assert hqi.db.n == n0 + 5
+    assert hqi.arena.n == n0 + 5  # incremental arena update covers new rows
+    assert set(hqi.arena.gid.tolist()) == set(range(n0 + 5))
+    # per-partition rows still align with ivf local order
+    for p in hqi.partitions:
+        assert len(p.rows) == p.ivf.n
+
+    # invalidate_caches drops both derived structures entirely
+    hqi.router.template_bitmap(workload.templates[0])  # repopulate cache
+    hqi.invalidate_caches()
+    assert hqi.router._bitmap_cache == {} and hqi._arena is None
+
+
+def test_deletes_do_not_invalidate_bitmap_cache(db, workload):
+    """Tombstones flow through live_mask, so cached bitmaps stay valid."""
+    svc = _service(db, workload)
+    svc.drain()
+    svc.index.search(workload, nprobe=4)
+    cached = dict(svc.index.router._bitmap_cache)
+    svc.delete([0, 1, 2])
+    assert svc.index.router._bitmap_cache == cached
+    got = _stream(svc, workload)
+    assert not ({0, 1, 2} & set(got[0].reshape(-1).tolist()))
+
+
+def test_scheduler_triggers_and_slot_padding():
+    sched = MicroBatchScheduler(max_batch=4, deadline_s=0.5, pad_pow2=True)
+    vec = np.zeros(8, dtype=np.float32)
+    t0 = 100.0
+    for i in range(3):
+        sched.push(PendingQuery(handle=None, vector=vec, filt=(), t_submit=t0))
+    assert not sched.ready(now=t0 + 0.1)  # under size, under deadline
+    assert sched.ready(now=t0 + 0.6)  # deadline fired
+    sched.push(PendingQuery(handle=None, vector=vec, filt=(), t_submit=t0))
+    assert sched.ready(now=t0 + 0.1)  # size fired
+    batch = sched.take()
+    assert len(batch) == 4 and len(sched) == 0
+    wl, n_real = sched.build_workload(batch[:3], k=5)
+    assert n_real == 3 and wl.m == 4  # padded to the next power-of-two slot
+    assert wl.template_of[3] == wl.template_of[0]
+
+
+def test_queue_bound_admission(db, workload):
+    svc = _service(db, workload, queue_bound=4)
+    for i in range(4):
+        svc.submit(workload.vectors[i], workload.templates[0])
+    with pytest.raises(QueueFull):
+        svc.submit(workload.vectors[4], workload.templates[0])
+    assert svc.telemetry.summary()["rejected"] == 1
+    assert svc.drain() == 4  # draining frees the queue
+    svc.submit(workload.vectors[4], workload.templates[0])
+
+
+def test_delta_store_scan_edges(db):
+    delta = DeltaStore(db, first_id=db.n)
+    wl = Workload(
+        vectors=np.zeros((3, db.d), dtype=np.float32),
+        templates=[()],
+        template_of=np.zeros(3, dtype=np.int32),
+        k=4,
+    )
+    assert delta.scan(wl) is None  # empty buffer
+    ids = delta.insert(np.ones((2, db.d), dtype=np.float32))
+    assert list(ids) == [db.n, db.n + 1]
+    for i in ids:
+        assert delta.delete(int(i))
+    assert not delta.delete(int(ids[0]))  # already dead
+    assert not delta.delete(0)  # not a buffer row
+    assert delta.scan(wl) is None  # all tombstoned
+    ids2 = delta.insert(np.full((1, db.d), 2.0, dtype=np.float32))
+    s, i = delta.scan(wl)  # k=4 > 1 live row: padded with (-inf, -1)
+    assert (i[:, 0] == ids2[0]).all() and (i[:, 1:] == -1).all()
+    assert np.isneginf(s[:, 1:]).all()
+
+
+def test_telemetry_records_flushes(db, workload):
+    svc = _service(db, workload, max_batch=16, nprobe=8)
+    _stream(svc, workload)
+    s = svc.telemetry.summary()
+    assert s["queries"] == workload.m
+    assert s["flushes"] == int(np.ceil(workload.m / 16))
+    assert s["p50_latency_s"] > 0 and s["p99_latency_s"] >= s["p50_latency_s"]
+    assert s["merge_dispatches_per_flush"] >= 1
+
+
+def test_threaded_service_and_dispatch_stats_thread_safety(db, workload):
+    """Background scheduler thread + concurrent submitters; the process-wide
+    DispatchStats counter must not lose increments under the race the lock
+    now prevents."""
+    ops.reset_dispatch_stats()
+    base = ops.dispatch_stats().snapshot()
+
+    # raw counter hammering from many threads: exact count must survive
+    def hammer():
+        for _ in range(500):
+            ops.dispatch_stats().record_knn((1, 1, 1, 1))
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert ops.dispatch_stats().snapshot().knn_calls - base.knn_calls == 4000
+    ops.reset_dispatch_stats()
+
+    svc = _service(db, workload, max_batch=8, deadline_s=0.002, nprobe=8)
+    svc.start()
+    try:
+        handles = []
+        for i in range(24):
+            while True:
+                try:
+                    handles.append(
+                        svc.submit(
+                            workload.vectors[i % workload.m],
+                            workload.templates[workload.template_of[i % workload.m]],
+                        )
+                    )
+                    break
+                except QueueFull:
+                    time.sleep(0.001)
+        for h in handles:
+            assert h.wait(timeout=120), "service thread never answered"
+    finally:
+        svc.stop()
+    assert svc.telemetry.summary()["queries"] == 24
