@@ -8,12 +8,17 @@ Scale knobs via env (laptop-scale defaults; the paper runs 100M vectors):
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows; "derived" holds
 the paper-comparable figure (speedup ×, recall, tuples-scanned fraction, …).
+``benchmarks.run`` additionally writes each suite's rows to a machine-readable
+``BENCH_<suite>.json`` (via ``write_suite_json``) so the perf trajectory can
+be tracked across PRs as a CI artifact.
 """
 from __future__ import annotations
 
+import json
 import os
+import platform
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -29,6 +34,31 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     row = f"{name},{us_per_call:.1f},{derived}"
     _ROWS.append(row)
     print(row, flush=True)
+
+
+def write_suite_json(suite: str, rows_csv: List[str], out_dir: str = ".") -> str:
+    """Write one suite's emitted rows as ``BENCH_<suite>.json``; returns path.
+
+    Schema: {"suite", "env": scale knobs, "rows": [{"name", "us_per_call",
+    "derived"}]} — stable keys so a dashboard can diff runs across PRs.
+    """
+    parsed = []
+    for row in rows_csv:
+        name, us, derived = row.split(",", 2)
+        parsed.append({"name": name, "us_per_call": float(us), "derived": derived})
+    doc = {
+        "suite": suite,
+        "env": {
+            "N": N, "D": D, "Q": Q, "fast": FAST,
+            "python": platform.python_version(),
+            "use_pallas": os.environ.get("REPRO_USE_PALLAS", "0"),
+        },
+        "rows": parsed,
+    }
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return path
 
 
 def timed(fn: Callable, *, warmup: int = 1, iters: int = 1) -> float:

@@ -5,7 +5,10 @@
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI-speed smoke subset
     REPRO_BENCH_FAST=1 ...                             # small sizes, any suite
 
-Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py).
+Prints ``name,us_per_call,derived`` CSV (see benchmarks/common.py) and writes
+each suite's rows to ``BENCH_<suite>.json`` in the working directory — the
+machine-readable artifact CI uploads so the perf trajectory (engine QPS,
+pq-vs-f32 bytes/recall, serving throughput) is tracked across PRs.
 """
 import os
 import sys
@@ -22,7 +25,7 @@ def main() -> None:
 
     from . import (
         bench_engine, bench_fig4_5, bench_fig6, bench_fig7, bench_kernels,
-        bench_service, bench_table3_4, bench_table5,
+        bench_service, bench_table3_4, bench_table5, common,
     )
 
     suites = {
@@ -38,7 +41,10 @@ def main() -> None:
     picks = args or list(suites)
     print("name,us_per_call,derived")
     for p in picks:
+        n0 = len(common.rows())
         suites[p]()
+        path = common.write_suite_json(p, common.rows()[n0:])
+        print(f"# wrote {path}", flush=True)
 
 
 if __name__ == '__main__':

@@ -6,6 +6,8 @@ Public API:
     HQIIndex / HQIConfig / Router — workload-aware index + Algorithm-3 search
     engine: PackedArena, PlanConfig, EngineTask, ExecutionPlan,
             build_plan / execute_plan, batch_search_ivf
+    compression: PQCodebook / PQIndex, train_pq / encode_pq / adc_tables
+            (engine integration via PlanConfig.scan_mode="pq")
     baselines: exhaustive_search, PreFilterIndex, PostFilterIndex, RangeIndex
     metrics: recall_at_k, tune_nprobe
 """
@@ -30,6 +32,7 @@ from .predicates import (  # noqa: F401
 )
 from .qdtree import QDTree, build_qdtree  # noqa: F401
 from .ivf import IVFIndex, ScanStats  # noqa: F401
+from .pq import PQCodebook, PQIndex, adc_tables, encode_pq, train_pq  # noqa: F401
 from .arena import PackedArena  # noqa: F401
 from .plan import EngineTask, ExecutionPlan, PlanConfig, build_plan  # noqa: F401
 from .planner import batch_search_ivf, execute_plan  # noqa: F401

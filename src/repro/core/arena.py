@@ -12,16 +12,24 @@ serves every partition, so one kernel dispatch can mix posting lists from
 anywhere in the index. ``gid`` maps packed rows straight back to the caller's
 tuple ids (global database rows for HQI, local vector indices for a standalone
 IVF), so executor output needs no per-partition id translation.
+
+Compressed storage: when a ``PQCodebook`` is attached, the arena also carries
+``codes`` — uint8 [N, M] PQ codes row-aligned with ``packed`` — so the
+engine's ADC scan stage gathers M-byte code rows instead of d·4-byte vectors
+and the exact re-rank stage gathers the (few) surviving f32 rows from the
+same arena. Codes are encoded once per partition block and maintained
+incrementally through ``updated()``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import kmeans as km
 from .ivf import IVFIndex
+from .pq import PQCodebook, encode_pq
 
 
 @dataclasses.dataclass
@@ -37,6 +45,8 @@ class PackedArena:
     part_row: np.ndarray  # i64 [P + 1] — partition p owns packed rows [row[p], row[p+1])
     centroids: List[np.ndarray]  # per-partition coarse quantizer
     metric: str
+    pq: Optional[PQCodebook] = None  # index-wide codebook (compressed mode)
+    codes: Optional[np.ndarray] = None  # uint8 [N, M], row-aligned with packed
 
     @property
     def n(self) -> int:
@@ -73,10 +83,25 @@ class PackedArena:
         s, e = int(self.part_row[part]), int(self.part_row[part + 1])
         return local_bitmap[self.local_of[s:e]]
 
+    def attach_pq(self, pq: PQCodebook) -> None:
+        """Encode the packed rows under ``pq`` (idempotent per codebook).
+
+        Used by the single-index path (``batch_search_ivf``) where the arena
+        is built before a codebook exists; ``HQIIndex`` instead passes ``pq``
+        at construction so codes ride every (incremental) rebuild.
+        """
+        if self.pq is pq and self.codes is not None:
+            return
+        self.pq = pq
+        self.codes = encode_pq(pq, self.packed)
+
     # ------------------------------------------------------------ constructors
 
     @staticmethod
-    def from_partitions(parts: Sequence[Tuple[np.ndarray, IVFIndex]]) -> "PackedArena":
+    def from_partitions(
+        parts: Sequence[Tuple[np.ndarray, IVFIndex]],
+        pq: Optional[PQCodebook] = None,
+    ) -> "PackedArena":
         """parts: (rows, ivf) pairs; ``rows`` maps ivf-local idx -> caller id."""
         if not parts:
             raise ValueError("arena needs at least one partition")
@@ -93,6 +118,8 @@ class PackedArena:
                 part_row=np.array([0, ivf.n], dtype=np.int64),
                 centroids=[ivf.centroids],
                 metric=metric,
+                pq=pq,
+                codes=None if pq is None else encode_pq(pq, ivf.packed),
             )
         packed, gid, local_of, starts, lens, cents = [], [], [], [], [], []
         list_base = np.zeros(len(parts) + 1, dtype=np.int64)
@@ -107,8 +134,9 @@ class PackedArena:
             cents.append(ivf.centroids)
             list_base[p + 1] = list_base[p] + ivf.n_lists
             part_row[p + 1] = part_row[p] + ivf.n
+        packed_all = np.concatenate(packed, axis=0)
         return PackedArena(
-            packed=np.concatenate(packed, axis=0),
+            packed=packed_all,
             gid=np.concatenate(gid),
             local_of=np.concatenate(local_of),
             list_start=np.concatenate(starts),
@@ -117,6 +145,8 @@ class PackedArena:
             part_row=part_row,
             centroids=cents,
             metric=metric,
+            pq=pq,
+            codes=None if pq is None else encode_pq(pq, packed_all),
         )
 
     @staticmethod
@@ -129,13 +159,15 @@ class PackedArena:
 
         ``parts`` is the full current partition list; only partitions in
         ``changed`` are re-derived from their (rows, ivf) pair — every other
-        partition's packed block, id map, and posting-list table are reused
-        from ``old`` as views (no per-partition recompute), and only the
-        final concatenation is paid. Partition count and order must match.
+        partition's packed block, id map, posting-list table, and PQ code
+        block are reused from ``old`` as views (no per-partition recompute or
+        re-encode), and only the final concatenation is paid. Partition count
+        and order must match.
         """
         assert len(parts) == old.n_parts, "partition count changed; rebuild instead"
         changed_set = set(int(c) for c in changed)
         packed, gid, local_of, starts, lens, cents = [], [], [], [], [], []
+        codes: List[np.ndarray] = []
         list_base = np.zeros(len(parts) + 1, dtype=np.int64)
         part_row = np.zeros(len(parts) + 1, dtype=np.int64)
         for p, (rows, ivf) in enumerate(parts):
@@ -146,6 +178,8 @@ class PackedArena:
                 local_of.append(ivf.order)
                 starts.append(ivf.offsets[:-1].astype(np.int64) + part_row[p])
                 lens.append(np.diff(ivf.offsets).astype(np.int64))
+                if old.pq is not None:
+                    codes.append(encode_pq(old.pq, ivf.packed))
                 n_p, nl_p = ivf.n, ivf.n_lists
             else:
                 r0, r1 = int(old.part_row[p]), int(old.part_row[p + 1])
@@ -155,6 +189,8 @@ class PackedArena:
                 local_of.append(old.local_of[r0:r1])
                 starts.append(old.list_start[l0:l1] - r0 + part_row[p])
                 lens.append(old.list_len[l0:l1])
+                if old.pq is not None:
+                    codes.append(old.codes[r0:r1])
                 n_p, nl_p = r1 - r0, l1 - l0
             cents.append(ivf.centroids)
             list_base[p + 1] = list_base[p] + nl_p
@@ -169,6 +205,8 @@ class PackedArena:
             part_row=part_row,
             centroids=cents,
             metric=old.metric,
+            pq=old.pq,
+            codes=np.concatenate(codes, axis=0) if old.pq is not None else None,
         )
 
     @staticmethod

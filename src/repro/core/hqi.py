@@ -16,7 +16,9 @@ engine over the whole workload:
     the ``PlanConfig.max_bucket_shapes`` compile-shape budget.
   * Stage 2 (core/planner.py): each bucket executes as ONE megabatched
     kernel dispatch through the arena, and the cross-partition merge is one
-    device-side segmented top-k.
+    device-side segmented top-k. With ``scan_mode="pq"`` the scan stage runs
+    over the arena's uint8 PQ codes (ADC) and a single exact re-rank dispatch
+    recovers recall — same plan, d·4/M× less scan traffic.
 
 Kernel dispatches per workload are therefore O(#buckets) ≤
 ``max_bucket_shapes`` instead of O(templates × partitions).
@@ -41,6 +43,7 @@ from .arena import PackedArena
 from .ivf import IVFIndex, ScanStats
 from .plan import EngineTask, PlanConfig, build_plan
 from .planner import ExtraCandidates, execute_plan
+from .pq import PQCodebook, train_pq
 from .predicates import evaluate_filter
 from .qdtree import QDTree, build_qdtree
 from .types import SearchResult, VectorDatabase, Workload
@@ -57,6 +60,23 @@ class HQIConfig:
     cost_mode: str = "tuples"
     seed: int = 0
     plan: PlanConfig = dataclasses.field(default_factory=PlanConfig)
+    # compressed execution (engine knobs, mirrored into ``plan`` when set):
+    # scan_mode="pq" trains an index-wide PQ codebook at build time, stores
+    # uint8 codes in the arena, and runs the ADC scan -> exact re-rank path
+    scan_mode: Optional[str] = None  # None = keep plan.scan_mode
+    refine_factor: Optional[int] = None  # None = keep plan.refine_factor
+    pq_m: int = 8  # PQ subspaces (d must be divisible; d·4/M× compression)
+
+    def __post_init__(self):
+        # replace, never mutate: the caller may share one PlanConfig across
+        # HQIConfigs, and flipping its scan_mode in place would silently
+        # switch sibling indexes onto a path they have no codebook for
+        if self.scan_mode is not None:
+            self.plan = dataclasses.replace(self.plan, scan_mode=self.scan_mode)
+        if self.refine_factor is not None:
+            self.plan = dataclasses.replace(
+                self.plan, refine_factor=int(self.refine_factor)
+            )
 
 
 @dataclasses.dataclass
@@ -70,10 +90,14 @@ class BuildInfo:
     qdtree_seconds: float = 0.0
     ivf_seconds: float = 0.0
     coarse_seconds: float = 0.0
+    pq_seconds: float = 0.0  # codebook training (scan_mode="pq" only)
 
     @property
     def total_seconds(self) -> float:
-        return self.qdtree_seconds + self.ivf_seconds + self.coarse_seconds
+        return (
+            self.qdtree_seconds + self.ivf_seconds + self.coarse_seconds
+            + self.pq_seconds
+        )
 
 
 class Router:
@@ -132,6 +156,7 @@ class HQIIndex:
         cfg: HQIConfig,
         coarse_centroids: Optional[np.ndarray],
         build_info: BuildInfo,
+        pq: Optional[PQCodebook] = None,
     ):
         self.db = db
         self.tree = tree
@@ -139,16 +164,19 @@ class HQIIndex:
         self.cfg = cfg
         self.coarse_centroids = coarse_centroids
         self.build_info = build_info
+        self.pq = pq  # index-wide codebook (scan_mode="pq")
         self.router = Router(db, tree, coarse_centroids, cfg.m)
         self._arena: Optional[PackedArena] = None
 
     @property
     def arena(self) -> PackedArena:
         """Index-wide packed arena, materialized on first engine-backed search
-        (the per-query-only configuration never pays the concatenation)."""
+        (the per-query-only configuration never pays the concatenation). When
+        a codebook was trained at build time the arena also carries uint8 PQ
+        codes for the engine's compressed scan stage."""
         if self._arena is None:
             self._arena = PackedArena.from_partitions(
-                [(p.rows, p.ivf) for p in self.partitions]
+                [(p.rows, p.ivf) for p in self.partitions], pq=self.pq
             )
         return self._arena
 
@@ -197,7 +225,19 @@ class HQIIndex:
             )
             partitions.append(Partition(rows=leaf.rows, ivf=ivf))
         info.ivf_seconds = time.perf_counter() - t0
-        return HQIIndex(db, tree, partitions, cfg, coarse, info)
+
+        pq_cb = None
+        if cfg.plan.scan_mode == "pq":
+            t0 = time.perf_counter()
+            assert db.d % cfg.pq_m == 0, (
+                f"scan_mode='pq': d={db.d} not divisible by pq_m={cfg.pq_m}"
+            )
+            pq_cb = train_pq(
+                db.vectors, cfg.pq_m, metric=db.metric,
+                iters=cfg.kmeans_iters, seed=cfg.seed,
+            )
+            info.pq_seconds = time.perf_counter() - t0
+        return HQIIndex(db, tree, partitions, cfg, coarse, info, pq=pq_cb)
 
     # ------------------------------------------------------------ batch search
 
@@ -301,9 +341,14 @@ class HQIIndex:
             arena, tasks, workload.vectors, m=m, k=k, cfg=self.cfg.plan, stats=stats
         )
         run_s, run_i = execute_plan(
-            plan, arena, workload.vectors, cfg=self.cfg.plan, extra=extra
+            plan, arena, workload.vectors, cfg=self.cfg.plan, extra=extra, stats=stats
         )
-        return SearchResult(ids=run_i, scores=run_s, tuples_scanned=stats.tuples_scanned)
+        return SearchResult(
+            ids=run_i,
+            scores=run_s,
+            tuples_scanned=stats.tuples_scanned,
+            bytes_scanned=stats.bytes_scanned,
+        )
 
     # ------------------------------------------------------------ online search
 

@@ -26,10 +26,15 @@ from .types import METRIC_IP, METRIC_L2
 class ScanStats:
     tuples_scanned: int = 0  # posting-list entries touched
     dists_computed: int = 0  # distance computations after bitmap skip
+    # bytes the engine's scan stages gathered from arena storage (f32 vector
+    # tiles, or uint8 code tiles + re-rank rows in scan_mode="pq") — the HBM
+    # traffic the compressed path exists to cut; engine path only
+    bytes_scanned: int = 0
 
     def __iadd__(self, o: "ScanStats"):
         self.tuples_scanned += o.tuples_scanned
         self.dists_computed += o.dists_computed
+        self.bytes_scanned += o.bytes_scanned
         return self
 
 

@@ -13,30 +13,37 @@ import numpy as np
 from .types import SearchResult, Workload
 
 
+def _hits_totals(result: SearchResult, truth: SearchResult) -> tuple:
+    """Per-query (retrieved-truth count, truth count), set-free.
+
+    One broadcasted [m, k_truth, k_result] id comparison replaces the Python
+    per-query set loop — this sits inside ``tune_nprobe``'s doubling search,
+    so it runs O(T · log nprobe) times per tuning pass. Ids within a row are
+    distinct (top-k over distinct tuples; -1 padding is masked out), so the
+    any-match reduction counts each hit exactly once.
+    """
+    t = np.asarray(truth.ids)
+    r = np.asarray(result.ids)
+    t_ok = t >= 0  # [m, kt]
+    match = (t[:, :, None] == r[:, None, :]) & t_ok[:, :, None] & (r >= 0)[:, None, :]
+    hits = match.any(axis=2).sum(axis=1)  # [m]
+    return hits.astype(np.int64), t_ok.sum(axis=1).astype(np.int64)
+
+
 def recall_at_k(result: SearchResult, truth: SearchResult) -> float:
-    """Fraction of ground-truth ids retrieved (averaged over queries)."""
-    m, k = truth.ids.shape
-    hits = 0
-    total = 0
-    for i in range(m):
-        t = set(int(x) for x in truth.ids[i] if x >= 0)
-        if not t:
-            continue
-        r = set(int(x) for x in result.ids[i] if x >= 0)
-        hits += len(t & r)
-        total += len(t)
-    return hits / max(total, 1)
+    """Fraction of ground-truth ids retrieved (micro-averaged over queries)."""
+    hits, totals = _hits_totals(result, truth)
+    return float(hits.sum()) / max(int(totals.sum()), 1)
 
 
 def per_template_recall(result: SearchResult, truth: SearchResult, workload: Workload) -> Dict[int, float]:
+    hits, totals = _hits_totals(result, truth)
     out = {}
     for ti in range(len(workload.templates)):
         qidx = workload.queries_for_template(ti)
         if len(qidx) == 0:
             continue
-        sub_r = SearchResult(ids=result.ids[qidx], scores=result.scores[qidx])
-        sub_t = SearchResult(ids=truth.ids[qidx], scores=truth.scores[qidx])
-        out[ti] = recall_at_k(sub_r, sub_t)
+        out[ti] = float(hits[qidx].sum()) / max(int(totals[qidx].sum()), 1)
     return out
 
 

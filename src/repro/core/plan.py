@@ -42,6 +42,13 @@ class PlanConfig:
     # adaptive executor (paper §6.5): below this group size the per-query
     # scan beats batched matmuls (Fig. 7a's crossover ≈ 100 at paper scale)
     adaptive_crossover: int = 64
+    # compressed execution: "f32" streams raw vectors (exact); "pq" runs the
+    # two-stage ADC scan -> exact re-rank over the arena's uint8 PQ codes,
+    # cutting scan HBM traffic by d·4/M× at a small recall cost
+    scan_mode: str = "f32"
+    # ADC candidates kept per query = refine_factor · k; the exact re-rank
+    # recovers recall lost to quantization (FAISS's "refine" stage)
+    refine_factor: int = 4
 
 
 @dataclasses.dataclass

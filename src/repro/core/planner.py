@@ -15,10 +15,24 @@ This module executes that plan:
      segmented top-k (``ops.merge_topk``) — Alg. 3 line 12 for the whole
      workload, replacing the per-(template × partition) numpy merge loop.
 
+Compressed execution (``PlanConfig.scan_mode="pq"``): the scan stage reads
+the arena's uint8 PQ codes instead of raw f32 vectors — each bucket is one
+``ops.workunit_pq_topk`` ADC dispatch producing ``refine_factor · k``
+candidates per (query, posting list). Candidates from all buckets then merge
+per query (one device merge), the survivors' f32 rows are gathered from the
+arena ONCE, and a single ``workunit_topk`` dispatch re-ranks them exactly —
+so dispatch cost stays O(#buckets) + 1 re-rank, never O(T×L), while scan HBM
+traffic drops by d·4/M× (e.g. 32× at d=64, M=8). Bitmap pushdown composes
+unchanged: the ADC stage applies the same ``valid`` mask, so re-rank
+candidates already satisfy every predicate. The final merge still folds in
+the adaptive executor's host-side (exact) candidates, which is sound because
+re-ranked scores are exact too.
+
 Dispatch cost is O(#buckets) ≤ ``PlanConfig.max_bucket_shapes`` instead of
-O(T×L). Every (query, posting-list) pair is evaluated exactly once and each
-vector lives in exactly one list, so results are identical to the per-query
-scan — tests assert equality of scores and candidate sets.
+O(T×L). In f32 mode every (query, posting-list) pair is evaluated exactly
+once and each vector lives in exactly one list, so results are identical to
+the per-query scan — tests assert equality of scores and candidate sets. In
+pq mode that uniqueness also means the candidate union is duplicate-free.
 
 Known scale tradeoff: the merge tensor is dense [m, n_slots, k] where
 ``n_slots`` is the *max* per-query slot count over the workload, so queries
@@ -32,7 +46,7 @@ builds a one-task plan, and executes it.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -40,11 +54,51 @@ import numpy as np
 from ..kernels import ops as kops
 from .arena import PackedArena
 from .ivf import IVFIndex, ScanStats
-from .plan import EngineTask, ExecutionPlan, PlanConfig, build_plan, _next_pow2
+from .plan import EngineTask, ExecutionPlan, PlanConfig, WorkUnit, build_plan, _next_pow2
+from .pq import PQCodebook, adc_tables
 
 # Extra per-query candidates merged alongside the plan's output (the adaptive
 # executor's host-side scans): (qrows i64 [mq], scores f32 [mq, k], ids i64 [mq, k])
 ExtraCandidates = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+def _assemble_bucket(
+    units: List[WorkUnit],
+    lp: int,
+    plan: ExecutionPlan,
+    arena: PackedArena,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Shared scan-stage assembly for one shape bucket.
+
+    Returns (Vrows i64 [W, lp] packed rows to gather, valid bool [W, lp],
+    qrow_of i64 [W, tq] workload query row per unit slot (-1 pad),
+    slot_of i64 [W, tq] merge-tensor slot per unit slot). W is the unit count
+    padded to a power of two so repeated workloads reuse a bounded set of
+    compiled shapes (padding units are fully masked).
+    """
+    tq = plan.tq
+    n_packed = arena.n
+    W = _next_pow2(len(units), 1)
+    Vrows = np.zeros((W, lp), dtype=np.int64)
+    valid = np.zeros((W, lp), dtype=bool)
+    qrow_of = np.full((W, tq), -1, dtype=np.int64)
+    slot_of = np.zeros((W, tq), dtype=np.int64)
+    for w, u in enumerate(units):
+        s0 = int(arena.list_start[u.glist])
+        llen = int(arena.list_len[u.glist])
+        rows = np.minimum(np.arange(lp) + s0, n_packed - 1)
+        Vrows[w] = rows
+        v_ok = np.arange(lp) < llen
+        task = plan.tasks[u.task]
+        if task.packed_bitmap is not None:
+            pb = task.packed_bitmap
+            local = np.minimum(rows - int(arena.part_row[task.part]), len(pb) - 1)
+            v_ok = v_ok & pb[local]
+        valid[w] = v_ok
+        nq = len(u.qrows)
+        qrow_of[w, :nq] = u.qrows
+        slot_of[w, :nq] = u.slots
+    return Vrows, valid, qrow_of, slot_of
 
 
 def execute_plan(
@@ -54,15 +108,23 @@ def execute_plan(
     *,
     cfg: Optional[PlanConfig] = None,
     extra: Sequence[ExtraCandidates] = (),
+    stats: Optional[ScanStats] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Returns (scores f32 [m, k] best-first, arena gids i64 [m, k]; -1 pad)."""
     cfg = PlanConfig() if cfg is None else cfg
+    if cfg.scan_mode == "pq" and plan.buckets:
+        if arena.codes is None or arena.pq is None:
+            raise ValueError(
+                "scan_mode='pq' needs a PQ-encoded arena: build the HQIIndex "
+                "with HQIConfig(scan_mode='pq'), or pass pq= to "
+                "batch_search_ivf; baseline indexes support scan_mode='f32' only"
+            )
+        return _execute_plan_pq(plan, arena, q_vecs, cfg=cfg, extra=extra, stats=stats)
+    if cfg.scan_mode not in ("f32", "pq"):
+        raise ValueError(f"unknown scan_mode {cfg.scan_mode!r}")
     m, k, tq = plan.m, plan.k, plan.tq
     # extras get per-query-dense slot columns after the plan's own slots
-    extra_slots = np.zeros(m, dtype=np.int64)
-    for qrows, _, _ in extra:
-        extra_slots[qrows] += 1
-    n_slots = plan.n_slots + (int(extra_slots.max()) if m else 0)
+    n_slots = plan.n_slots + _extra_slot_width(extra, m)
     if m == 0 or n_slots == 0:
         return (
             np.full((m, k), -np.inf, np.float32),
@@ -73,34 +135,16 @@ def execute_plan(
     out_idx = np.full((m, n_slots, k), -1, dtype=np.int64)
     d = q_vecs.shape[1]
 
-    n_packed = arena.n if plan.buckets else 0
     for lp in sorted(plan.buckets):
         units = plan.buckets[lp]
-        # pad the unit count to a power of two so repeated workloads reuse a
-        # bounded set of compiled shapes (padding units are fully masked)
-        W = _next_pow2(len(units), 1)
+        Vrows, valid, qrow_of, slot_of = _assemble_bucket(units, lp, plan, arena)
+        W = Vrows.shape[0]
         Q = np.zeros((W, tq, d), dtype=np.float32)
-        Vrows = np.zeros((W, lp), dtype=np.int64)
-        valid = np.zeros((W, lp), dtype=bool)
-        qrow_of = np.full((W, tq), -1, dtype=np.int64)
-        slot_of = np.zeros((W, tq), dtype=np.int64)
-        for w, u in enumerate(units):
-            s0 = int(arena.list_start[u.glist])
-            llen = int(arena.list_len[u.glist])
-            rows = np.minimum(np.arange(lp) + s0, n_packed - 1)
-            Vrows[w] = rows
-            v_ok = np.arange(lp) < llen
-            task = plan.tasks[u.task]
-            if task.packed_bitmap is not None:
-                pb = task.packed_bitmap
-                local = np.minimum(rows - int(arena.part_row[task.part]), len(pb) - 1)
-                v_ok = v_ok & pb[local]
-            valid[w] = v_ok
-            nq = len(u.qrows)
-            Q[w, :nq] = q_vecs[u.qrows]
-            qrow_of[w, :nq] = u.qrows
-            slot_of[w, :nq] = u.slots
+        wmask = qrow_of >= 0  # [W, tq]
+        Q[wmask] = q_vecs[qrow_of[wmask]]
         V = arena.packed[Vrows]  # [W, lp, d] — one gather across all partitions
+        if stats is not None:
+            stats.bytes_scanned += V.nbytes
         s, i_loc = kops.workunit_topk(
             jnp.asarray(Q),
             jnp.asarray(V),
@@ -120,31 +164,179 @@ def execute_plan(
         )
         gidx = arena.gid[packed_rows]
         gidx = np.where(i_loc < 0, -1, gidx)
-        wmask = qrow_of >= 0  # [W, tq]
         qr = qrow_of[wmask]
         sl = slot_of[wmask]
         out_scores[qr, sl, :kk] = s[wmask]
         out_idx[qr, sl, :kk] = gidx[wmask]
 
-    next_extra = np.full(m, plan.n_slots, dtype=np.int64)
+    return _fold_extras_and_merge(out_scores, out_idx, extra, plan.n_slots, k)
+
+
+def _extra_slot_width(extra: Sequence[ExtraCandidates], m: int) -> int:
+    """Max per-query count of host-side extra candidate columns."""
+    extra_slots = np.zeros(m, dtype=np.int64)
+    for qrows, _, _ in extra:
+        extra_slots[qrows] += 1
+    return int(extra_slots.max()) if m else 0
+
+
+def _fold_extras_and_merge(
+    out_scores: np.ndarray,  # f32 [m, n_slots, k] — base candidates filled in
+    out_idx: np.ndarray,  # i64 [m, n_slots, k]
+    extra: Sequence[ExtraCandidates],
+    base_slots: int,  # extras occupy slot columns base_slots, base_slots+1, ...
+    k: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold the adaptive executor's host-side candidates in, then final-merge.
+
+    Shared tail of both scan modes, so extras handling can never diverge
+    between the f32 and pq paths.
+    """
+    m = out_scores.shape[0]
+    next_extra = np.full(m, base_slots, dtype=np.int64)
     for qrows, es, ei in extra:
         kk = min(k, es.shape[1])
         slot = next_extra[qrows]
         next_extra[qrows] += 1
         out_scores[qrows, slot, :kk] = es[:, :kk]
         out_idx[qrows, slot, :kk] = ei[:, :kk]
+    top_s, top_i = _padded_merge(out_scores.reshape(m, -1), out_idx.reshape(m, -1), k)
+    return np.asarray(top_s, dtype=np.float32), np.asarray(top_i, dtype=np.int64)
 
-    # pad the merge width to a power of two so repeated workloads reuse a
-    # bounded set of compiled merge shapes
-    flat_s = out_scores.reshape(m, -1)
-    flat_i = out_idx.reshape(m, -1)
+
+def _padded_merge(
+    flat_s: np.ndarray, flat_i: np.ndarray, k: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """merge_topk with the candidate width padded to a power of two (so
+    repeated workloads reuse a bounded set of compiled merge shapes)."""
     width = _next_pow2(flat_s.shape[1], k)
     if width > flat_s.shape[1]:
         padc = width - flat_s.shape[1]
         flat_s = np.pad(flat_s, ((0, 0), (0, padc)), constant_values=-np.inf)
         flat_i = np.pad(flat_i, ((0, 0), (0, padc)), constant_values=-1)
-    top_s, top_i = kops.merge_topk(jnp.asarray(flat_s), jnp.asarray(flat_i), k)
-    return np.asarray(top_s, dtype=np.float32), np.asarray(top_i, dtype=np.int64)
+    return kops.merge_topk(jnp.asarray(flat_s), jnp.asarray(flat_i), k)
+
+
+def _execute_plan_pq(
+    plan: ExecutionPlan,
+    arena: PackedArena,
+    q_vecs: np.ndarray,  # f32 [m, d]
+    *,
+    cfg: PlanConfig,
+    extra: Sequence[ExtraCandidates] = (),
+    stats: Optional[ScanStats] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Compressed two-stage execution: ADC scan over codes, then exact re-rank.
+
+    Stage A — per shape bucket, ONE ``workunit_pq_topk`` dispatch scans uint8
+    code tiles with each unit's VMEM-resident per-query LUTs, keeping
+    k′ = refine_factor · k ADC candidates per (query, posting list).
+    Stage B — candidates from all buckets merge to the per-query top-k′ (one
+    device merge over ADC scores), their f32 rows are gathered from the arena
+    once, and ONE ``workunit_topk`` dispatch re-scores them exactly. The
+    final merge then folds in the adaptive executor's host-side candidates,
+    exactly like the f32 path.
+    """
+    m, k, tq = plan.m, plan.k, plan.tq
+    d = q_vecs.shape[1]
+    kprime = max(k, int(cfg.refine_factor) * k)
+
+    # ADC tables only for queries the plan actually scans (the adaptive
+    # executor may have routed most of the workload to host-side extras),
+    # shipped to the device ONCE; each bucket's per-unit [W, tq, M, 256]
+    # operand is expanded by a device-side gather, so the host never
+    # materializes the replicated tables and every dispatch reuses the same
+    # resident [U, M, 256] array. (Streaming LUT rows inside the kernel via
+    # scalar-prefetch index maps would kill the device-side expansion too —
+    # see ROADMAP.)
+    used = np.unique(
+        np.concatenate(
+            [u.qrows for units in plan.buckets.values() for u in units]
+        )
+    )
+    lut_pos = np.zeros(m, dtype=np.int64)
+    lut_pos[used] = np.arange(len(used))
+    luts_dev = jnp.asarray(adc_tables(arena.pq, q_vecs[used]))  # [U, M, 256]
+
+    cand_s = np.full((m, plan.n_slots, kprime), -np.inf, dtype=np.float32)
+    cand_rows = np.full((m, plan.n_slots, kprime), -1, dtype=np.int64)
+
+    for lp in sorted(plan.buckets):
+        units = plan.buckets[lp]
+        Vrows, valid, qrow_of, slot_of = _assemble_bucket(units, lp, plan, arena)
+        W = Vrows.shape[0]
+        wmask = qrow_of >= 0
+        # padding slots map to LUT row 0; their outputs are dropped via wmask
+        luts = jnp.take(
+            luts_dev, jnp.asarray(lut_pos[np.maximum(qrow_of, 0)]), axis=0
+        )  # [W, tq, M, 256], gathered on device
+        codes = arena.codes[Vrows]  # [W, lp, M] uint8 — the compressed gather
+        if stats is not None:
+            stats.bytes_scanned += codes.nbytes
+        kk = min(kprime, lp)
+        s, i_loc = kops.workunit_pq_topk(
+            jnp.asarray(luts),
+            jnp.asarray(codes),
+            jnp.asarray(valid),
+            kk,
+            use_pallas=cfg.use_pallas,
+            interpret=cfg.interpret,
+        )
+        s = np.asarray(s)
+        i_loc = np.asarray(i_loc)  # [W, tq, kk] index into the unit's lp rows
+        packed_rows = np.take_along_axis(
+            np.broadcast_to(Vrows[:, None, :], i_loc.shape[:2] + (lp,)),
+            np.maximum(i_loc, 0),
+            axis=2,
+        )
+        packed_rows = np.where(i_loc < 0, -1, packed_rows)
+        qr = qrow_of[wmask]
+        sl = slot_of[wmask]
+        cand_s[qr, sl, :kk] = s[wmask]
+        cand_rows[qr, sl, :kk] = packed_rows[wmask]
+
+    # per-query top-k' ADC candidates across every bucket and probe slot
+    top_cs, top_rows = _padded_merge(
+        cand_s.reshape(m, -1), cand_rows.reshape(m, -1), kprime
+    )
+    rows = np.asarray(top_rows, dtype=np.int64)  # [m, k'] packed rows (-1 pad)
+
+    # exact re-rank: one gather of the surviving f32 rows + one dispatch.
+    # Units are per-query (TQ=1) so each query re-scores only ITS candidates;
+    # m pads to a power of two for compile-shape reuse.
+    mp = _next_pow2(m, 1)
+    Qr = np.zeros((mp, 1, d), dtype=np.float32)
+    Qr[:m, 0] = q_vecs
+    Vr = np.zeros((mp, kprime, d), dtype=np.float32)
+    Vr[:m] = arena.packed[np.maximum(rows, 0)]
+    valid_r = np.zeros((mp, kprime), dtype=bool)
+    valid_r[:m] = rows >= 0
+    if stats is not None:
+        stats.bytes_scanned += Vr[:m].nbytes
+    s, i_loc = kops.workunit_topk(
+        jnp.asarray(Qr),
+        jnp.asarray(Vr),
+        jnp.asarray(valid_r),
+        min(k, kprime),
+        metric=arena.metric,
+        use_pallas=cfg.use_pallas,
+        interpret=cfg.interpret,
+    )
+    s = np.asarray(s)[:m, 0]  # [m, kk] exact scores
+    i_loc = np.asarray(i_loc)[:m, 0]  # [m, kk] index into the k' candidates
+    kk = s.shape[-1]
+    packed_rows = np.take_along_axis(rows, np.maximum(i_loc, 0).astype(np.int64), axis=1)
+    gidx = np.where(i_loc < 0, -1, arena.gid[np.maximum(packed_rows, 0)])
+    gidx = np.where(packed_rows < 0, -1, gidx)
+
+    # final merge: re-ranked (exact) plan results in slot 0 + host-side exact
+    # extras in the columns after it — the same tail as the f32 path
+    n_slots = 1 + _extra_slot_width(extra, m)
+    out_scores = np.full((m, n_slots, k), -np.inf, dtype=np.float32)
+    out_idx = np.full((m, n_slots, k), -1, dtype=np.int64)
+    out_scores[:, 0, :kk] = np.where(gidx >= 0, s, -np.inf)
+    out_idx[:, 0, :kk] = gidx
+    return _fold_extras_and_merge(out_scores, out_idx, extra, 1, k)
 
 
 def batch_search_ivf(
@@ -156,6 +348,7 @@ def batch_search_ivf(
     bitmap: Optional[np.ndarray] = None,  # bool [n] in LOCAL vector order
     stats: Optional[ScanStats] = None,
     cfg: Optional[PlanConfig] = None,
+    pq: Optional[PQCodebook] = None,  # required iff cfg.scan_mode == "pq"
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Plan + execute one IVF index: (scores f32 [m, k], local idx i64 [m, k])."""
     cfg = PlanConfig() if cfg is None else cfg
@@ -163,6 +356,14 @@ def batch_search_ivf(
     if m == 0:
         return np.zeros((0, k), np.float32), np.zeros((0, k), np.int64)
     arena = PackedArena.from_ivf(ivf)
+    if cfg.scan_mode == "pq":
+        # explicit per-call codebook: the arena is memoized on the IVF, so
+        # falling back to arena.pq would silently reuse whatever codebook a
+        # PREVIOUS caller attached. Re-encoding is skipped when the same
+        # codebook object is passed again (attach_pq is identity-idempotent).
+        if pq is None:
+            raise ValueError("batch_search_ivf(scan_mode='pq') needs an explicit pq=")
+        arena.attach_pq(pq)
     packed_bitmap = None
     if bitmap is not None:
         packed_bitmap = arena.packed_bitmap(0, bitmap)
@@ -173,4 +374,4 @@ def batch_search_ivf(
         packed_bitmap=packed_bitmap,
     )
     plan = build_plan(arena, [task], q_vecs, m=m, k=k, cfg=cfg, stats=stats)
-    return execute_plan(plan, arena, q_vecs, cfg=cfg)
+    return execute_plan(plan, arena, q_vecs, cfg=cfg, stats=stats)

@@ -222,6 +222,7 @@ class SearchResult:
     ids: np.ndarray
     scores: np.ndarray
     tuples_scanned: int = 0  # distance computations performed (paper metric 2)
+    bytes_scanned: int = 0  # arena bytes gathered by the engine's scan stages
 
     @property
     def k(self) -> int:

@@ -180,6 +180,40 @@ def workunit_topk(
     return _batched_masked_topk_jnp(q, v, valid, k, metric)
 
 
+def workunit_pq_topk(
+    luts: jax.Array,  # f32 [W, TQ, M, 256]  per-query ADC tables per work unit
+    codes: jax.Array,  # uint8 [W, TV, M]     gathered PQ code rows per unit
+    valid: jax.Array,  # bool [W, TV]
+    k: int,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Compressed (ADC) work-unit entry point — ``workunit_topk`` over codes.
+
+    One bucket of the engine's compressed scan stage, one dispatch: each work
+    unit's TQ lookup tables scan its uint8 code tile via a batched one-hot
+    MXU contraction (kernels/pq_scan.py). Codes stay uint8 across the
+    dispatch boundary and widen in-register — HBM traffic per scanned row is
+    M bytes instead of d·4.
+    """
+    _DISPATCH.record_knn(
+        ("pq", luts.shape[0], luts.shape[1], codes.shape[1], int(k))
+    )
+    use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    if use_pallas:
+        from .pq_scan import workunit_pq_scan
+
+        return workunit_pq_scan(luts, codes, valid, k=k, interpret=interpret)
+    return _workunit_pq_topk_jnp(luts, codes, valid, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _workunit_pq_topk_jnp(luts, codes, valid, k):
+    return _ref.workunit_pq_topk_ref(luts, codes, valid, k)
+
+
 def merge_topk(
     scores: jax.Array,  # f32 [m, C] — per-query candidate scores (-inf = absent)
     idx: jax.Array,  # i64 [m, C] — candidate ids (-1 = absent)

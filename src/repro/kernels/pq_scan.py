@@ -1,15 +1,27 @@
-"""Pallas TPU kernel: fused ADC scan (PQ lookup-table distances) + top-k.
+"""Pallas TPU kernels: fused ADC scan (PQ lookup-table distances) + top-k.
 
-The per-query LUT ([M, 256] f32 ≤ 64 KB) stays resident in VMEM while uint8
-code tiles stream from HBM; scores accumulate as M gathers and fold into the
-same running-top-k scratch as fused_knn. HBM traffic per query tile is the
-CODE bytes (d·4/M× less than raw vectors) — this is the paper-family
-(FAISS IVF-PQ) scan, TPU-shaped.
+Two grids over compressed (PQ) code storage:
+
+  * ``pq_scan`` — the original one-query grid: ONE query's [M, 256] LUT stays
+    resident in VMEM while uint8 code tiles stream from HBM.
+  * ``workunit_pq_scan`` — the engine's batched work-unit grid ``[W, TQ, TV]``:
+    each unit carries TQ per-query LUTs ([TQ, M, 256] f32 ≤ 64 KB·TQ/256,
+    VMEM-resident across that unit's whole code sweep) and scans uint8 code
+    tiles with a SINGLE one-hot MXU contraction — the per-subspace Python loop
+    of ``pq_scan`` is flattened into one ``[TQ, M·256] @ [M·256, TV]`` matmul.
+    Results fold into the same running-top-k VMEM scratch as fused_knn.
+
+HBM traffic per scanned row is the CODE bytes (d·4/M× less than raw vectors —
+the FAISS IVF-PQ family scan, TPU-shaped). Codes ship as uint8 end to end and
+widen to int32 in-register; padding them to int32 host-side would quadruple
+the code-tile traffic and defeat the point.
 
 Gather note: Mosaic supports small-table gathers via one-hot matmul when
 dynamic gather is unavailable; we express the lookup as
-one_hot(codes) @ lutᵀ per subspace — an MXU-friendly [TV,256]×[256,1]
-contraction batched over M (interpret mode validates numerics either way).
+``one_hot(codes) @ lutᵀ`` — an MXU-friendly contraction (interpret mode
+validates numerics either way). On real hardware the [TV, M] uint8 tile wants
+M padded toward the lane width; at HQI's M ∈ {4, 8, 16} the tile is narrow,
+which interpret mode tolerates and Mosaic handles via relayout.
 """
 from __future__ import annotations
 
@@ -25,7 +37,7 @@ from .fused_knn import NEG_INF, _merge_topk
 
 def _pq_scan_kernel(
     lut_ref,  # [M, 256] f32 — ONE query's tables
-    codes_ref,  # [TV, M] int32
+    codes_ref,  # [TV, M] uint8
     valid_ref,  # [1, TV] int32
     out_s_ref,  # [1, K]
     out_i_ref,  # [1, K]
@@ -44,7 +56,7 @@ def _pq_scan_kernel(
         acc_s_ref[...] = jnp.full(acc_s_ref.shape, NEG_INF, jnp.float32)
         acc_i_ref[...] = jnp.full(acc_i_ref.shape, -1, jnp.int32)
 
-    codes = codes_ref[...]  # [TV, M]
+    codes = codes_ref[...].astype(jnp.int32)  # [TV, M] — widen in-register
     lut = lut_ref[...]  # [M, 256]
     # LUT gather as one-hot matmul per subspace (MXU-friendly, Mosaic-safe)
     scores = jnp.zeros((codes.shape[0],), jnp.float32)
@@ -73,7 +85,7 @@ def _pq_scan_kernel(
 @functools.partial(jax.jit, static_argnames=("k", "tv", "interpret"))
 def pq_scan(
     lut: jax.Array,  # f32 [M, 256] — one query
-    codes: jax.Array,  # uint8/int32 [NV, M]
+    codes: jax.Array,  # uint8 [NV, M]
     valid: jax.Array,  # bool [NV]
     *,
     k: int,
@@ -82,7 +94,9 @@ def pq_scan(
 ) -> tuple[jax.Array, jax.Array]:
     nv, m = codes.shape
     nv_p = max(tv, ((nv + tv - 1) // tv) * tv)
-    codes_p = jnp.zeros((nv_p, m), jnp.int32).at[:nv].set(codes.astype(jnp.int32))
+    # keep the code tiles uint8 across the dispatch boundary — int32 padding
+    # would 4× the HBM traffic the compressed scan exists to avoid
+    codes_p = jnp.zeros((nv_p, m), jnp.uint8).at[:nv].set(codes.astype(jnp.uint8))
     valid_p = jnp.zeros((1, nv_p), jnp.int32).at[0, :nv].set(valid.astype(jnp.int32))
     nv_tiles = nv_p // tv
     kernel = functools.partial(_pq_scan_kernel, k=k, tv=tv, m=m, nv_tiles=nv_tiles)
@@ -110,3 +124,110 @@ def pq_scan(
     )
     s, i = call(lut, codes_p, valid_p)
     return s[0], i[0]
+
+
+# ---------------------------------------------------------------------------
+# Batched work-unit ADC scan (the engine's compressed execution kernel)
+# ---------------------------------------------------------------------------
+
+
+def _workunit_pq_kernel(
+    lut_ref,  # [1, TQ, M*256] f32 — this unit's per-query tables, flattened
+    codes_ref,  # [1, TV, M] uint8
+    valid_ref,  # [1, TV] int32
+    out_s_ref,  # [1, TQ, K]
+    out_i_ref,  # [1, TQ, K]
+    acc_s_ref,  # scratch f32 [TQ, K]
+    acc_i_ref,  # scratch i32 [TQ, K]
+    *,
+    k: int,
+    tv: int,
+    m: int,
+    nv_tiles: int,
+):
+    j = pl.program_id(1)  # code tile (inner) — w outer, so scratch is per-unit
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s_ref[...] = jnp.full(acc_s_ref.shape, NEG_INF, jnp.float32)
+        acc_i_ref[...] = jnp.full(acc_i_ref.shape, -1, jnp.int32)
+
+    codes = codes_ref[0].astype(jnp.int32)  # [TV, M] — uint8 widened in-register
+    # one-hot over ALL subspaces at once: [TV, M, 256] -> [TV, M*256]; the
+    # whole ADC gather is then ONE MXU contraction instead of an M-long loop
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tv, m, 256), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32).reshape(tv, m * 256)
+    lut = lut_ref[0]  # [TQ, M*256]
+    scores = jax.lax.dot_general(
+        lut, onehot, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [TQ, TV]
+    valid = valid_ref[0, :] != 0
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    gidx = jnp.where(valid[None, :], col + j * tv, -1)
+
+    new_s, new_i = _merge_topk(acc_s_ref[...], acc_i_ref[...], scores, gidx, k)
+    acc_s_ref[...] = new_s
+    acc_i_ref[...] = new_i
+
+    @pl.when(j == nv_tiles - 1)
+    def _flush():
+        out_s_ref[...] = new_s[None]
+        out_i_ref[...] = new_i[None]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tv", "interpret"))
+def workunit_pq_scan(
+    luts: jax.Array,  # f32 [W, TQ, M, 256] — per-query ADC tables per unit
+    codes: jax.Array,  # uint8 [W, NV, M] — gathered code rows per unit
+    valid: jax.Array,  # bool [W, NV]
+    *,
+    k: int,
+    tv: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Work-unit grid [W, TQ, TV] over compressed codes.
+
+    Returns (scores f32 [W, TQ, k] best-first, idx i32 [W, TQ, k]; -1 = none).
+    The LUT block of a unit stays VMEM-resident across its code sweep; code
+    tiles ship as uint8 and widen in-register.
+    """
+    w, tq, m, nbook = luts.shape
+    assert nbook == 256, "PQ codebooks are 8-bit (256 entries)"
+    nv = codes.shape[1]
+    k = int(k)
+    # shrink the tile to the (pow2-padded) list length so short posting lists
+    # don't pay a full 512-row sweep
+    tv = min(tv, max(8, 1 << max(0, nv - 1).bit_length()))
+    nv_p = max(tv, ((nv + tv - 1) // tv) * tv)
+    codes_p = jnp.zeros((w, nv_p, m), jnp.uint8).at[:, :nv].set(codes.astype(jnp.uint8))
+    valid_p = jnp.zeros((w, nv_p), jnp.int32).at[:, :nv].set(valid.astype(jnp.int32))
+    luts_f = luts.reshape(w, tq, m * nbook)
+    nv_tiles = nv_p // tv
+
+    kernel = functools.partial(
+        _workunit_pq_kernel, k=k, tv=tv, m=m, nv_tiles=nv_tiles
+    )
+    call = pl.pallas_call(
+        kernel,
+        grid=(w, nv_tiles),  # unit outer, code tile inner
+        in_specs=[
+            pl.BlockSpec((1, tq, m * nbook), lambda w_, j: (w_, 0, 0)),
+            pl.BlockSpec((1, tv, m), lambda w_, j: (w_, j, 0)),
+            pl.BlockSpec((1, tv), lambda w_, j: (w_, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, k), lambda w_, j: (w_, 0, 0)),
+            pl.BlockSpec((1, tq, k), lambda w_, j: (w_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, tq, k), jnp.float32),
+            jax.ShapeDtypeStruct((w, tq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    return call(luts_f, codes_p, valid_p)

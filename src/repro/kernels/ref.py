@@ -49,6 +49,38 @@ def masked_topk_ref(
     return top, idx
 
 
+def adc_topk_ref(
+    luts: jax.Array,  # f32 [nq, M, 256] — per-query ADC lookup tables
+    codes: jax.Array,  # uint8/int32 [nv, M]
+    valid: jax.Array,  # bool [nv]
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """ADC scan + top-k oracle (the compressed counterpart of masked_topk_ref).
+
+    score[q, v] = Σ_m lut[q, m, code[v, m]] — higher is better (adc_tables
+    negates l2). Returns (scores f32 [nq, k] best-first, idx int32 [nq, k]);
+    masked-out or absent entries are (-inf-ish, -1).
+    """
+    c = codes.astype(jnp.int32)  # [nv, M]
+    m = luts.shape[1]
+    # fancy-gather per subspace: luts[q, m, c[v, m]] -> [nq, nv, M], then sum
+    scores = luts[:, jnp.arange(m)[None, :], c].sum(axis=-1)  # [nq, nv]
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    top, idx = jax.lax.top_k(scores, k)
+    idx = jnp.where(top <= NEG_INF / 2, -1, idx).astype(jnp.int32)
+    return top, idx
+
+
+def workunit_pq_topk_ref(
+    luts: jax.Array,  # f32 [W, TQ, M, 256]
+    codes: jax.Array,  # uint8/int32 [W, TV, M]
+    valid: jax.Array,  # bool [W, TV]
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched work-unit ADC oracle: adc_topk_ref vmapped over the unit dim."""
+    return jax.vmap(lambda l, c, v: adc_topk_ref(l, c, v, k))(luts, codes, valid)
+
+
 def flash_attention_ref(
     q: jax.Array,
     k: jax.Array,

@@ -21,18 +21,8 @@ from repro.core.plan import EngineTask, build_plan
 from repro.core.planner import batch_search_ivf, execute_plan
 from repro.kernels import ops
 
+from conftest import assert_same_results as _assert_same_results
 from conftest import small_db, small_workload
-
-
-def _assert_same_results(a_s, a_i, b_s, b_i):
-    np.testing.assert_allclose(
-        np.where(np.isfinite(a_s), a_s, -1e30),
-        np.where(np.isfinite(b_s), b_s, -1e30),
-        rtol=1e-4,
-        atol=1e-4,
-    )
-    for r in range(a_i.shape[0]):
-        assert set(a_i[r][a_i[r] >= 0].tolist()) == set(b_i[r][b_i[r] >= 0].tolist()), r
 
 
 @pytest.mark.parametrize("metric", ["ip", "l2"])

@@ -116,3 +116,39 @@ def test_pq_scan_kernel_matches_oracle():
         s1, i1 = pq_scan(luts[r], jnp.asarray(idx.codes), valid, k=5, tv=128, interpret=True)
         s2, i2 = adc_scan_ref(luts[r : r + 1], jnp.asarray(idx.codes), valid, 5)
         np.testing.assert_allclose(np.asarray(s1), np.asarray(s2)[0], rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("w,tq,nv,m,k", [(3, 5, 100, 4, 6), (1, 8, 700, 8, 10), (4, 2, 30, 4, 3)])
+def test_workunit_pq_topk_matches_ref(w, tq, nv, m, k):
+    """Batched work-unit ADC kernel: pallas (one-hot MXU contraction) == jnp
+    reference == the single-query oracle, with uint8 code tiles."""
+    from repro.core.pq import PQIndex, adc_scan_ref, adc_tables
+
+    rng = np.random.default_rng(w * 100 + m)
+    d = m * 8
+    vecs = rng.normal(size=(max(nv, 300), d)).astype(np.float32)
+    idx = PQIndex.build(vecs, m=m)
+    luts = np.stack(
+        [adc_tables(idx.cb, rng.normal(size=(tq, d)).astype(np.float32)) for _ in range(w)]
+    )
+    codes = np.stack([idx.codes[rng.integers(0, len(vecs), nv)] for _ in range(w)])
+    assert codes.dtype == np.uint8  # ships uint8 across the dispatch boundary
+    valid = rng.random((w, nv)) > 0.3
+    s_ref, i_ref = ref.workunit_pq_topk_ref(
+        jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(valid), k
+    )
+    s_pl, i_pl = ops.workunit_pq_topk(
+        jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(valid), k,
+        use_pallas=True, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(s_pl), np.asarray(s_ref), rtol=1e-4, atol=1e-4)
+    for w_ in range(w):
+        # unit w_ equals the one-query oracle run on its own tables
+        s1, _ = adc_scan_ref(
+            jnp.asarray(luts[w_]), jnp.asarray(codes[w_]), jnp.asarray(valid[w_]), k
+        )
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s_ref)[w_], rtol=1e-4, atol=1e-4)
+        for r in range(tq):
+            a = np.asarray(i_ref)[w_, r]
+            b = np.asarray(i_pl)[w_, r]
+            assert set(a[a >= 0].tolist()) == set(b[b >= 0].tolist())

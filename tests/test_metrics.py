@@ -1,0 +1,72 @@
+"""Vectorized recall metrics == the per-query set semantics they replaced."""
+import numpy as np
+
+from repro.core import recall_at_k
+from repro.core.metrics import per_template_recall
+from repro.core.types import SearchResult, Workload
+
+
+def _recall_sets(result, truth):
+    """The original per-query set-intersection definition (oracle)."""
+    hits = total = 0
+    for i in range(truth.ids.shape[0]):
+        t = set(int(x) for x in truth.ids[i] if x >= 0)
+        if not t:
+            continue
+        r = set(int(x) for x in result.ids[i] if x >= 0)
+        hits += len(t & r)
+        total += len(t)
+    return hits / max(total, 1)
+
+
+def _random_results(rng, m, k, n_ids=200, pad_frac=0.2):
+    ids = rng.integers(0, n_ids, size=(m, k))
+    # distinct ids per row (top-k over distinct tuples), some -1 padding rows
+    for r in range(m):
+        ids[r] = rng.choice(n_ids, size=k, replace=False)
+        npad = rng.integers(0, max(1, int(k * pad_frac) + 1))
+        if npad:
+            ids[r, k - npad :] = -1
+    return SearchResult(ids=ids.astype(np.int64), scores=np.zeros((m, k), np.float32))
+
+
+def test_recall_matches_set_semantics():
+    rng = np.random.default_rng(0)
+    for m, k in [(40, 10), (7, 3), (100, 5)]:
+        res = _random_results(rng, m, k)
+        tru = _random_results(rng, m, k)
+        assert recall_at_k(res, tru) == _recall_sets(res, tru)
+
+
+def test_recall_all_empty_truth():
+    res = SearchResult(ids=np.zeros((4, 3), np.int64), scores=np.zeros((4, 3), np.float32))
+    tru = SearchResult(ids=np.full((4, 3), -1, np.int64), scores=np.zeros((4, 3), np.float32))
+    assert recall_at_k(res, tru) == 0.0
+
+
+def test_recall_result_k_differs_from_truth_k():
+    """Broadcasting handles k_result != k_truth (over-fetch / refine shapes)."""
+    rng = np.random.default_rng(1)
+    res = _random_results(rng, 20, 12)
+    tru = _random_results(rng, 20, 5)
+    wide = SearchResult(ids=res.ids[:, :5], scores=res.scores[:, :5])
+    assert recall_at_k(res, tru) >= recall_at_k(wide, tru)
+
+
+def test_per_template_recall_matches_per_slice():
+    rng = np.random.default_rng(2)
+    m, k = 60, 5
+    res = _random_results(rng, m, k)
+    tru = _random_results(rng, m, k)
+    wl = Workload(
+        vectors=np.zeros((m, 4), np.float32),
+        templates=[(), ((),), ((), ())],  # 3 distinct dummy templates
+        template_of=(np.arange(m) % 3).astype(np.int32),
+        k=k,
+    )
+    got = per_template_recall(res, tru, wl)
+    for ti in range(3):
+        qidx = wl.queries_for_template(ti)
+        sub_r = SearchResult(ids=res.ids[qidx], scores=res.scores[qidx])
+        sub_t = SearchResult(ids=tru.ids[qidx], scores=tru.scores[qidx])
+        assert got[ti] == _recall_sets(sub_r, sub_t)

@@ -25,20 +25,10 @@ from repro.service import (
     ServiceConfig,
 )
 
+from conftest import assert_same_results as _assert_same_results
 from conftest import small_db, small_workload
 
 EXACT = 10_000  # nprobe past every list count: search becomes exact
-
-
-def _assert_same_results(a_s, a_i, b_s, b_i):
-    np.testing.assert_allclose(
-        np.where(np.isfinite(a_s), a_s, -1e30),
-        np.where(np.isfinite(b_s), b_s, -1e30),
-        rtol=1e-4,
-        atol=1e-4,
-    )
-    for r in range(a_i.shape[0]):
-        assert set(a_i[r][a_i[r] >= 0].tolist()) == set(b_i[r][b_i[r] >= 0].tolist()), r
 
 
 def _service(db, wl, **cfg_kw):
