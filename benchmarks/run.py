@@ -13,7 +13,7 @@ pq-vs-f32 bytes/recall, serving throughput) is tracked across PRs.
 import os
 import sys
 
-SMOKE_SUITES = ["engine", "kernels", "service"]
+SMOKE_SUITES = ["engine", "kernels", "service", "distributed"]
 
 
 def main() -> None:
@@ -24,8 +24,8 @@ def main() -> None:
         args = args or SMOKE_SUITES
 
     from . import (
-        bench_engine, bench_fig4_5, bench_fig6, bench_fig7, bench_kernels,
-        bench_service, bench_table3_4, bench_table5, common,
+        bench_distributed, bench_engine, bench_fig4_5, bench_fig6, bench_fig7,
+        bench_kernels, bench_service, bench_table3_4, bench_table5, common,
     )
 
     suites = {
@@ -37,6 +37,7 @@ def main() -> None:
         "kernels": bench_kernels.main,
         "engine": bench_engine.main,
         "service": bench_service.main,
+        "distributed": bench_distributed.main,
     }
     picks = args or list(suites)
     print("name,us_per_call,derived")

@@ -19,6 +19,15 @@ engine's ADC scan stage gathers M-byte code rows instead of d·4-byte vectors
 and the exact re-rank stage gathers the (few) surviving f32 rows from the
 same arena. Codes are encoded once per partition block and maintained
 incrementally through ``updated()``.
+
+Sharded storage: ``shard()`` splits the arena into contiguous *partition*
+slices, one per model-axis rank of a device mesh. Because partitions are
+contiguous blocks of the packed array, every per-rank structure — f32 rows,
+uint8 PQ codes, posting-list table, id map — is a zero-copy view of the base
+arena, re-based to rank-local coordinates. ``gid`` stays *global* in every
+shard, so the sharded executor's outputs need no cross-rank id translation,
+and ``packed_bitmap`` keeps working per shard because bitmap slices are
+partition-local already.
 """
 from __future__ import annotations
 
@@ -30,6 +39,19 @@ import numpy as np
 from . import kmeans as km
 from .ivf import IVFIndex
 from .pq import PQCodebook, encode_pq
+
+
+def _nearest_cuts(boundary_rows: np.ndarray, targets: np.ndarray) -> np.ndarray:
+    """Index of the boundary NEAREST each row target (not the next one up —
+    snapping up degenerates badly under skew, e.g. partitions of 10 and 900
+    rows split 2 ways must cut at 10, not at the end)."""
+    hi = np.clip(
+        np.searchsorted(boundary_rows, targets, side="left"),
+        1, len(boundary_rows) - 1,
+    )
+    lo = hi - 1
+    pick_lo = (targets - boundary_rows[lo]) <= (boundary_rows[hi] - targets)
+    return np.where(pick_lo, lo, hi).astype(np.int64)
 
 
 @dataclasses.dataclass
@@ -94,6 +116,61 @@ class PackedArena:
             return
         self.pq = pq
         self.codes = encode_pq(pq, self.packed)
+
+    # ------------------------------------------------------------------ shard
+
+    def shard(
+        self, n_shards: int, bounds: Optional[Sequence[int]] = None
+    ) -> "ShardedArena":
+        """Split into contiguous slices, one per model-axis rank.
+
+        The split is at *posting-list* granularity — the finest sharding
+        that keeps every work unit's posting list whole on one rank, the
+        invariant the sharded executor's bit-exact parity rests on — and
+        prefers cuts on whole partition boundaries (the HQI case: each rank
+        owns contiguous partition slices, so rows, codes, posting lists, and
+        bitmap slices move together) unless partition skew would leave the
+        mesh imbalanced, in which case the cut falls on posting-list
+        boundaries inside a partition (e.g. the standalone-IVF case, one
+        partition spread over every rank).
+
+        ``bounds`` (optional, ``n_shards + 1`` monotone GLOBAL list ids with
+        ``bounds[0] == 0`` and ``bounds[-1] == n_lists``) pins the split —
+        tests use it to force skewed and empty shards. The default cuts at
+        the boundary NEAREST each balanced-row target. Shards are index
+        ranges, not copies: the base arena stays the single storage and
+        ``gid`` stays global, so no result ever needs per-rank id
+        translation.
+        """
+        n_shards = int(n_shards)
+        assert n_shards >= 1, n_shards
+        G = self.n_lists
+        row_starts = np.append(self.list_start, self.n)  # i64 [G + 1]
+        if bounds is None:
+            targets = np.arange(1, n_shards) * (self.n / n_shards)
+            # candidate splits at both granularities; keep the better-balanced
+            # one (partition slices win ties — whole-slice shards are the
+            # deployment-friendly layout)
+            by_part = self.list_base[
+                _nearest_cuts(self.part_row[: self.n_parts + 1], targets)
+            ]
+            by_list = _nearest_cuts(row_starts, targets)
+            candidates = []
+            for cuts in (by_part, by_list):
+                b = np.concatenate([[0], np.clip(cuts, 0, G), [G]]).astype(np.int64)
+                b = np.maximum.accumulate(b)
+                candidates.append((int(np.diff(row_starts[b]).max()), b))
+            list_bounds = min(candidates, key=lambda c: c[0])[1]
+        else:
+            list_bounds = np.asarray(bounds, dtype=np.int64)
+            assert list_bounds.shape == (n_shards + 1,), list_bounds
+            assert list_bounds[0] == 0 and list_bounds[-1] == G, list_bounds
+            assert (np.diff(list_bounds) >= 0).all(), list_bounds
+        return ShardedArena(
+            base=self,
+            list_bounds=list_bounds,
+            row_bounds=row_starts[list_bounds],
+        )
 
     # ------------------------------------------------------------ constructors
 
@@ -210,6 +287,26 @@ class PackedArena:
         )
 
     @staticmethod
+    def sharded_from_ivf(ivf: IVFIndex, n_shards: int) -> "ShardedArena":
+        """Sharded single-index arena, memoized per shard count.
+
+        The shard is just index bounds over the (memoized) ``from_ivf``
+        arena, but still worth caching: repeated sharded ``batch_search_ivf``
+        calls over one IVF reuse the split instead of re-deriving boundaries
+        per call. Codebook changes need no invalidation — the bounds are
+        pq-independent and ``attach_pq``'s code swap is visible through the
+        shared ``base`` reference.
+        """
+        arena = PackedArena.from_ivf(ivf)
+        cache = getattr(ivf, "_sharded_cache", None)
+        if cache is None:
+            cache = ivf._sharded_cache = {}
+        key = int(n_shards)
+        if key not in cache:
+            cache[key] = arena.shard(n_shards)
+        return cache[key]
+
+    @staticmethod
     def from_ivf(ivf: IVFIndex) -> "PackedArena":
         """Single-index arena; ``gid`` is the ivf-local vector index.
 
@@ -221,3 +318,37 @@ class PackedArena:
             arena = PackedArena.from_partitions([(np.arange(ivf.n, dtype=np.int64), ivf)])
             ivf._arena_cache = arena
         return arena
+
+
+@dataclasses.dataclass
+class ShardedArena:
+    """The arena split into per-rank contiguous posting-list ranges.
+
+    Built by ``PackedArena.shard``. Rank r owns global posting lists
+    ``[list_bounds[r], list_bounds[r+1])`` and therefore global packed rows
+    ``[row_bounds[r], row_bounds[r+1])`` — the sharded planner routes each
+    work unit to ``owner_of_list(unit.glist)`` and the compressed path's
+    re-rank uses ``owner_of_row`` to hand every rank exactly the candidate
+    rows it stores. An empty range is a rank with no data (all rows on other
+    ranks), which executes as fully-masked padding.
+    """
+
+    base: PackedArena
+    list_bounds: np.ndarray  # i64 [R + 1] — global posting-list split
+    row_bounds: np.ndarray  # i64 [R + 1] — global packed-row split
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.list_bounds) - 1
+
+    @property
+    def rows_per_shard(self) -> np.ndarray:
+        return np.diff(self.row_bounds)
+
+    def owner_of_list(self, glists: np.ndarray) -> np.ndarray:
+        """Owning rank per global list id (duplicate bounds = empty shards)."""
+        return np.searchsorted(self.list_bounds, glists, side="right") - 1
+
+    def owner_of_row(self, rows: np.ndarray) -> np.ndarray:
+        """Owning rank per global packed row."""
+        return np.searchsorted(self.row_bounds, rows, side="right") - 1

@@ -23,6 +23,12 @@ engine over the whole workload:
 Kernel dispatches per workload are therefore O(#buckets) ≤
 ``max_bucket_shapes`` instead of O(templates × partitions).
 
+Sharded execution: with ``HQIConfig.mesh`` set, stage 2 runs across the
+device mesh (``core/distributed.execute_sharded``) — the arena shards over
+the model axis, each rank executes its own bucket slice, and the only
+cross-rank traffic is the O(k·|model|) per-query candidate gather. Results
+stay bit-identical to the single-device engine.
+
 Online search: same routing, per-query IVF scans (used standalone — the
 "workload-aware index only" configuration of Section 6.5). The "auto" mode
 is the paper's adaptive executor: small (template × partition) groups take
@@ -66,6 +72,12 @@ class HQIConfig:
     scan_mode: Optional[str] = None  # None = keep plan.scan_mode
     refine_factor: Optional[int] = None  # None = keep plan.refine_factor
     pq_m: int = 8  # PQ subspaces (d must be divisible; d·4/M× compression)
+    # sharded execution: a jax Mesh routes every engine-backed search through
+    # core/distributed.execute_sharded — the arena shards over the mesh's
+    # model axis and cross-rank traffic is the O(k·|model|) candidate gather.
+    # Results are bit-identical to mesh=None (tests/test_engine_sharded.py).
+    mesh: Optional[object] = None  # jax.sharding.Mesh (opaque: core stays numpy)
+    shard_spec: Optional[object] = None  # core.distributed.ShardSpec
 
     def __post_init__(self):
         # replace, never mutate: the caller may share one PlanConfig across
@@ -167,6 +179,7 @@ class HQIIndex:
         self.pq = pq  # index-wide codebook (scan_mode="pq")
         self.router = Router(db, tree, coarse_centroids, cfg.m)
         self._arena: Optional[PackedArena] = None
+        self._sharded = None  # ShardedArena views, keyed off the live arena
 
     @property
     def arena(self) -> PackedArena:
@@ -179,6 +192,13 @@ class HQIIndex:
                 [(p.rows, p.ivf) for p in self.partitions], pq=self.pq
             )
         return self._arena
+
+    def sharded_arena(self, n_shards: int):
+        """Per-rank views of the arena for ``cfg.mesh`` searches, memoized
+        until the arena itself is invalidated (views stay aliased to it)."""
+        if self._sharded is None or self._sharded.n_shards != int(n_shards):
+            self._sharded = self.arena.shard(int(n_shards))
+        return self._sharded
 
     # ------------------------------------------------------------------ build
 
@@ -335,19 +355,39 @@ class HQIIndex:
             workload, nprobe=nprobe, batch_vec=batch_vec, stats=stats,
             live_mask=live_mask,
         )
-        # the all-per-query path (batch_vec=False) never touches the arena
-        arena = self.arena if tasks else None
-        plan = build_plan(
-            arena, tasks, workload.vectors, m=m, k=k, cfg=self.cfg.plan, stats=stats
-        )
-        run_s, run_i = execute_plan(
-            plan, arena, workload.vectors, cfg=self.cfg.plan, extra=extra, stats=stats
-        )
+        shard_stats = None
+        if tasks and self.cfg.mesh is not None:
+            # sharded engine: same tasks, same routing, device-mesh execution
+            from .distributed import ShardSpec, execute_sharded
+
+            spec = self.cfg.shard_spec or ShardSpec()
+            run_s, run_i, shard_stats = execute_sharded(
+                self.sharded_arena(spec.n_shards(self.cfg.mesh)),
+                tasks,
+                workload.vectors,
+                mesh=self.cfg.mesh,
+                spec=spec,
+                m=m,
+                k=k,
+                cfg=self.cfg.plan,
+                extra=extra,
+                stats=stats,
+            )
+        else:
+            # the all-per-query path (batch_vec=False) never touches the arena
+            arena = self.arena if tasks else None
+            plan = build_plan(
+                arena, tasks, workload.vectors, m=m, k=k, cfg=self.cfg.plan, stats=stats
+            )
+            run_s, run_i = execute_plan(
+                plan, arena, workload.vectors, cfg=self.cfg.plan, extra=extra, stats=stats
+            )
         return SearchResult(
             ids=run_i,
             scores=run_s,
             tuples_scanned=stats.tuples_scanned,
             bytes_scanned=stats.bytes_scanned,
+            shard_stats=shard_stats,
         )
 
     # ------------------------------------------------------------ online search
@@ -375,6 +415,7 @@ class HQIIndex:
         """
         self.router.clear_cache()
         self._arena = None
+        self._sharded = None
 
     def extend(self, new_db: VectorDatabase) -> np.ndarray:
         """Fold freshly inserted tuples into the existing partitioning.
@@ -418,6 +459,7 @@ class HQIIndex:
             self._arena = PackedArena.updated(
                 self._arena, [(p.rows, p.ivf) for p in self.partitions], changed
             )
+        self._sharded = None  # shard views alias the replaced arena
         return new_rows
 
     # ------------------------------------------------------------------ stats

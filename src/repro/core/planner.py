@@ -34,11 +34,22 @@ once and each vector lives in exactly one list, so results are identical to
 the per-query scan — tests assert equality of scores and candidate sets. In
 pq mode that uniqueness also means the candidate union is duplicate-free.
 
+Sharded execution (``execute_plan_sharded``): the same two stages across a
+device mesh — each rank dispatches its shard's work units per bucket inside
+one ``shard_map``, and the cross-rank merge is an all-gather of per-query
+top-k candidates (``ops.sharded_merge_topk``, O(k·|model|) traffic). Results
+are bit-identical to ``execute_plan``; ``core/distributed.py`` is the thin
+mesh entry.
+
 Known scale tradeoff: the merge tensor is dense [m, n_slots, k] where
 ``n_slots`` is the *max* per-query slot count over the workload, so queries
-routed to few partitions pay for the widest query's slots. At very large
-m × n_slots a segmented (ragged) candidate layout would cut peak memory —
-a natural follow-up once sharded serving (ROADMAP) lands.
+routed to few partitions pay for the widest query's slots — and the sharded
+path allocates it PER RANK ([R, m, n_slots, k]). The sharded scan operands
+pay the same dense-stacking tax: each bucket ships [R, W, ...] where W is
+the MAX per-rank unit count, so a shard-skewed unit distribution transfers
+mostly-masked slices for the light ranks. At very large m × n_slots (or
+heavy skew) a segmented (ragged) candidate layout is the next memory lever
+(ROADMAP).
 
 ``batch_search_ivf`` survives as the single-index entry point (used by the
 baselines and benchmarks): it wraps the index in a one-partition arena,
@@ -46,15 +57,24 @@ builds a one-task plan, and executes it.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
-from .arena import PackedArena
+from .arena import PackedArena, ShardedArena
 from .ivf import IVFIndex, ScanStats
-from .plan import EngineTask, ExecutionPlan, PlanConfig, WorkUnit, build_plan, _next_pow2
+from .plan import (
+    EngineTask,
+    ExecutionPlan,
+    PlanConfig,
+    ShardedPlan,
+    WorkUnit,
+    build_plan,
+    _next_pow2,
+)
 from .pq import PQCodebook, adc_tables
 
 # Extra per-query candidates merged alongside the plan's output (the adaptive
@@ -67,6 +87,7 @@ def _assemble_bucket(
     lp: int,
     plan: ExecutionPlan,
     arena: PackedArena,
+    w_pad: Optional[int] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Shared scan-stage assembly for one shape bucket.
 
@@ -74,11 +95,12 @@ def _assemble_bucket(
     qrow_of i64 [W, tq] workload query row per unit slot (-1 pad),
     slot_of i64 [W, tq] merge-tensor slot per unit slot). W is the unit count
     padded to a power of two so repeated workloads reuse a bounded set of
-    compiled shapes (padding units are fully masked).
+    compiled shapes (padding units are fully masked); the sharded executor
+    passes ``w_pad`` so every rank assembles the same stacked width.
     """
     tq = plan.tq
     n_packed = arena.n
-    W = _next_pow2(len(units), 1)
+    W = _next_pow2(len(units), 1) if w_pad is None else w_pad
     Vrows = np.zeros((W, lp), dtype=np.int64)
     valid = np.zeros((W, lp), dtype=bool)
     qrow_of = np.full((W, tq), -1, dtype=np.int64)
@@ -144,7 +166,10 @@ def execute_plan(
         Q[wmask] = q_vecs[qrow_of[wmask]]
         V = arena.packed[Vrows]  # [W, lp, d] — one gather across all partitions
         if stats is not None:
-            stats.bytes_scanned += V.nbytes
+            # real work units only (pow2 pad excluded), so the figure is
+            # comparable across configurations — the sharded executor counts
+            # the same way per rank
+            stats.bytes_scanned += len(units) * lp * d * 4
         s, i_loc = kops.workunit_topk(
             jnp.asarray(Q),
             jnp.asarray(V),
@@ -272,7 +297,7 @@ def _execute_plan_pq(
         )  # [W, tq, M, 256], gathered on device
         codes = arena.codes[Vrows]  # [W, lp, M] uint8 — the compressed gather
         if stats is not None:
-            stats.bytes_scanned += codes.nbytes
+            stats.bytes_scanned += len(units) * lp * arena.codes.shape[1]
         kk = min(kprime, lp)
         s, i_loc = kops.workunit_pq_topk(
             jnp.asarray(luts),
@@ -312,7 +337,8 @@ def _execute_plan_pq(
     valid_r = np.zeros((mp, kprime), dtype=bool)
     valid_r[:m] = rows >= 0
     if stats is not None:
-        stats.bytes_scanned += Vr[:m].nbytes
+        # real surviving candidates only (matches the sharded re-rank)
+        stats.bytes_scanned += int((rows >= 0).sum()) * d * 4
     s, i_loc = kops.workunit_topk(
         jnp.asarray(Qr),
         jnp.asarray(Vr),
@@ -339,6 +365,378 @@ def _execute_plan_pq(
     return _fold_extras_and_merge(out_scores, out_idx, extra, 1, k)
 
 
+# ----------------------------------------------------------------- sharded
+
+@dataclasses.dataclass
+class ShardStats:
+    """Per-rank accounting of one sharded execution (the bench/test probe).
+
+    ``per_rank_bytes`` counts arena bytes each rank's scan stages gathered
+    for its REAL work units (stacking pad excluded) — the quantity that must
+    shrink ~1/|model| per rank versus a single device. ``gathered_per_query``
+    is the total candidate columns the all-gather merges moved per query:
+    O(k · |model|) by construction, independent of DB size, which the parity
+    suite asserts as the engine's entire cross-rank traffic.
+    """
+
+    n_shards: int
+    per_rank_bytes: np.ndarray  # i64 [R] — arena bytes scanned by rank r
+    per_rank_units: np.ndarray  # i64 [R] — real work units executed by rank r
+    per_rank_dispatches: np.ndarray  # i64 [R] — stages rank r had live work in
+    gathered_per_query: int = 0  # candidate columns all-gathered per query
+
+    @staticmethod
+    def zeros(n_shards: int) -> "ShardStats":
+        return ShardStats(
+            n_shards=int(n_shards),
+            per_rank_bytes=np.zeros(n_shards, dtype=np.int64),
+            per_rank_units=np.zeros(n_shards, dtype=np.int64),
+            per_rank_dispatches=np.zeros(n_shards, dtype=np.int64),
+        )
+
+
+def execute_plan_sharded(
+    splan: ShardedPlan,
+    sharded: ShardedArena,
+    q_vecs: np.ndarray,  # f32 [m, d]
+    *,
+    mesh,
+    axis: str = "model",
+    cfg: Optional[PlanConfig] = None,
+    extra: Sequence[ExtraCandidates] = (),
+    stats: Optional[ScanStats] = None,
+    shard_stats: Optional[ShardStats] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage 2 across a device mesh — bit-identical to ``execute_plan``.
+
+    Per shared shape bucket, every rank's work units stack along the mesh
+    axis and run as ONE ``sharded_workunit_topk`` (or ``_pq_topk``) dispatch:
+    rank r gathers rows/codes only from ITS arena shard, so per-rank scan
+    traffic is its shard's share of the workload. Candidates then reduce in
+    two hops: a rank-local top-k over each rank's own candidate tensor,
+    followed by the all-gather merge (``sharded_merge_topk``) whose traffic
+    is k·|model| (score, id) pairs per query — never distance rows, never
+    O(n). Extras (the adaptive executor's host-side exact scans) fold into
+    the final merge exactly like the single-device paths.
+
+    Parity argument (what tests/test_engine_sharded.py asserts): every
+    (query, posting-list) pair lives on exactly one rank and is evaluated
+    with the same per-unit kernel math as the single-device engine, so the
+    union of per-rank candidates equals the single-device candidate set and
+    the two-hop top-k selects the identical result. Caveat: candidates with
+    EXACTLY equal scores straddling the k (or pq k′) boundary may resolve in
+    a different order than the single-device flat merge (top_k breaks ties
+    by position, and the two layouts order candidates differently) — both
+    answers are correct top-ks; on continuous data exact ties are duplicate
+    vectors.
+    """
+    cfg = PlanConfig() if cfg is None else cfg
+    if cfg.scan_mode not in ("f32", "pq"):
+        raise ValueError(f"unknown scan_mode {cfg.scan_mode!r}")
+    sstats = ShardStats.zeros(sharded.n_shards) if shard_stats is None else shard_stats
+    sstats.per_rank_units += splan.per_rank_units
+    m, k = splan.plan.m, splan.plan.k
+    if m == 0 or splan.n_units == 0:
+        n_slots = _extra_slot_width(extra, m)
+        if m == 0 or n_slots == 0:
+            return (
+                np.full((m, k), -np.inf, np.float32),
+                np.full((m, k), -1, np.int64),
+            )
+        out_scores = np.full((m, n_slots, k), -np.inf, dtype=np.float32)
+        out_idx = np.full((m, n_slots, k), -1, dtype=np.int64)
+        return _fold_extras_and_merge(out_scores, out_idx, extra, 0, k)
+    if cfg.scan_mode == "pq":
+        if sharded.base.codes is None or sharded.base.pq is None:
+            raise ValueError(
+                "scan_mode='pq' needs a PQ-encoded arena: build the HQIIndex "
+                "with HQIConfig(scan_mode='pq'), or pass pq= to "
+                "batch_search_ivf; baseline indexes support scan_mode='f32' only"
+            )
+        return _execute_sharded_pq(
+            splan, sharded, q_vecs, mesh=mesh, axis=axis, cfg=cfg,
+            extra=extra, stats=stats, sstats=sstats,
+        )
+    return _execute_sharded_f32(
+        splan, sharded, q_vecs, mesh=mesh, axis=axis, cfg=cfg,
+        extra=extra, stats=stats, sstats=sstats,
+    )
+
+
+def _assemble_bucket_stacked(
+    splan: ShardedPlan,
+    sharded: ShardedArena,
+    lp: int,
+    q_vecs: np.ndarray,
+    with_q: bool = True,
+) -> Tuple[np.ndarray, ...]:
+    """Stack every rank's bucket assembly along the mesh axis (host side).
+
+    Returns (unit_lists, Q [R,W,tq,d], valid [R,W,lp], qrow_of, slot_of,
+    Vrows [R,W,lp], wmask). Assembly runs against the BASE arena — a rank's
+    units reference only posting lists it owns, so slice r of ``Vrows``
+    addresses rank r's rows (up to fully-masked clamp padding). Ranks
+    without units in this bucket contribute fully-masked zero slices; W is
+    the max rank unit count padded pow2 so all ranks share one dispatch
+    shape. ``with_q=False`` (the ADC path, which scans with LUTs instead of
+    query vectors) skips the query-tile allocation and gather and returns
+    ``Q=None``.
+    """
+    R = sharded.n_shards
+    tq, d = splan.plan.tq, q_vecs.shape[1]
+    unit_lists = [splan.rank_buckets[r].get(lp, []) for r in range(R)]
+    W = _next_pow2(max(len(u) for u in unit_lists), 1)
+    valid = np.zeros((R, W, lp), dtype=bool)
+    qrow_of = np.full((R, W, tq), -1, dtype=np.int64)
+    slot_of = np.zeros((R, W, tq), dtype=np.int64)
+    Vrows = np.zeros((R, W, lp), dtype=np.int64)
+    for r in range(R):
+        if not unit_lists[r]:
+            continue
+        vr, va, qr, sl = _assemble_bucket(
+            unit_lists[r], lp, splan.plan, sharded.base, w_pad=W
+        )
+        Vrows[r], valid[r], qrow_of[r], slot_of[r] = vr, va, qr, sl
+    wmask = qrow_of >= 0
+    Q = None
+    if with_q:
+        Q = np.zeros((R, W, tq, d), dtype=np.float32)
+        Q[wmask] = q_vecs[qrow_of[wmask]]
+    return unit_lists, Q, valid, qrow_of, slot_of, Vrows, wmask
+
+
+def _merge_with_extras(
+    ms: np.ndarray,  # f32 [m, k] — the sharded gather merge's final top-k
+    mi: np.ndarray,  # i64 [m, k]
+    extra: Sequence[ExtraCandidates],
+    k: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Shared tail of both sharded scan modes: fold the adaptive executor's
+    host-side exact candidates (if any) into the merged device result —
+    slot 0 holds the sharded top-k, extras take the columns after it."""
+    if not extra:
+        return ms, mi  # the gather merge already IS the final per-query top-k
+    m = ms.shape[0]
+    out_slots = 1 + _extra_slot_width(extra, m)
+    out_scores = np.full((m, out_slots, k), -np.inf, dtype=np.float32)
+    out_idx = np.full((m, out_slots, k), -1, dtype=np.int64)
+    out_scores[:, 0] = ms
+    out_idx[:, 0] = mi
+    return _fold_extras_and_merge(out_scores, out_idx, extra, 1, k)
+
+
+def _gather_merge(
+    mesh,
+    axis: str,
+    cand_s: np.ndarray,  # f32 [R, m, n_slots, kk] per-rank candidate tensors
+    cand_i: np.ndarray,  # i64 [R, m, n_slots, kk]
+    k: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Two-hop reduction: rank-local top-k, then the k·|model| gather merge.
+    Candidate width pads pow2 (≥ k) so repeated workloads reuse compiled
+    merge shapes, like the single-device ``_padded_merge``."""
+    R, m = cand_s.shape[:2]
+    flat_s = cand_s.reshape(R, m, -1)
+    flat_i = cand_i.reshape(R, m, -1)
+    width = _next_pow2(flat_s.shape[2], k)
+    if width > flat_s.shape[2]:
+        padc = width - flat_s.shape[2]
+        flat_s = np.pad(flat_s, ((0, 0), (0, 0), (0, padc)), constant_values=-np.inf)
+        flat_i = np.pad(flat_i, ((0, 0), (0, 0), (0, padc)), constant_values=-1)
+    ms, mi = kops.sharded_merge_topk(
+        mesh, axis, jnp.asarray(flat_s), jnp.asarray(flat_i), k
+    )
+    return np.asarray(ms, dtype=np.float32), np.asarray(mi, dtype=np.int64)
+
+
+def _execute_sharded_f32(
+    splan: ShardedPlan,
+    sharded: ShardedArena,
+    q_vecs: np.ndarray,
+    *,
+    mesh,
+    axis: str,
+    cfg: PlanConfig,
+    extra: Sequence[ExtraCandidates],
+    stats: Optional[ScanStats],
+    sstats: ShardStats,
+) -> Tuple[np.ndarray, np.ndarray]:
+    R = sharded.n_shards
+    m, k = splan.plan.m, splan.plan.k
+    d = q_vecs.shape[1]
+    arena = sharded.base
+    n_slots = splan.plan.n_slots
+    cand_s = np.full((R, m, n_slots, k), -np.inf, dtype=np.float32)
+    cand_i = np.full((R, m, n_slots, k), -1, dtype=np.int64)
+
+    for lp in splan.pads:
+        unit_lists, Q, valid, qrow_of, slot_of, Vrows, wmask = _assemble_bucket_stacked(
+            splan, sharded, lp, q_vecs
+        )
+        V = np.zeros(valid.shape + (d,), dtype=np.float32)
+        for r in range(R):
+            if not unit_lists[r]:
+                continue
+            V[r] = arena.packed[Vrows[r]]
+            sstats.per_rank_bytes[r] += len(unit_lists[r]) * lp * d * 4
+            sstats.per_rank_dispatches[r] += 1
+        if stats is not None:
+            stats.bytes_scanned += int(sum(len(u) for u in unit_lists)) * lp * d * 4
+        kk = min(k, lp)
+        s, i_loc = kops.sharded_workunit_topk(
+            mesh, axis,
+            jnp.asarray(Q), jnp.asarray(V), jnp.asarray(valid), kk,
+            metric=arena.metric,
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+        )
+        s = np.asarray(s)
+        i_loc = np.asarray(i_loc)  # [R, W, tq, kk] index into the unit's lp rows
+        for r in range(R):
+            if not unit_lists[r]:
+                continue
+            packed_rows = np.take_along_axis(
+                np.broadcast_to(Vrows[r][:, None, :], i_loc[r].shape[:2] + (lp,)),
+                np.maximum(i_loc[r], 0),
+                axis=2,
+            )
+            gidx = arena.gid[packed_rows]
+            gidx = np.where(i_loc[r] < 0, -1, gidx)
+            qr, sl = qrow_of[r][wmask[r]], slot_of[r][wmask[r]]
+            cand_s[r, qr, sl, :kk] = s[r][wmask[r]]
+            cand_i[r, qr, sl, :kk] = gidx[wmask[r]]
+
+    ms, mi = _gather_merge(mesh, axis, cand_s, cand_i, k)
+    sstats.gathered_per_query += R * k
+    return _merge_with_extras(ms, mi, extra, k)
+
+
+def _execute_sharded_pq(
+    splan: ShardedPlan,
+    sharded: ShardedArena,
+    q_vecs: np.ndarray,
+    *,
+    mesh,
+    axis: str,
+    cfg: PlanConfig,
+    extra: Sequence[ExtraCandidates],
+    stats: Optional[ScanStats],
+    sstats: ShardStats,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Compressed two-stage execution across the mesh.
+
+    Stage A mirrors the f32 path with uint8 code tiles: per shared bucket,
+    one sharded ADC dispatch; each rank keeps k′ = refine_factor · k ADC
+    candidates per (query, posting list) as GLOBAL packed rows. The ADC
+    candidate gather (k′·|model| per query) then selects the same global
+    top-k′ the single-device merge would — any global survivor is also a
+    local survivor on its rank — and stage B re-ranks exactly: every rank
+    gathers the f32 rows of the candidates IT stores, scores them in one
+    sharded dispatch, and the final k·|model| gather merges the partial
+    exact top-ks. Extras fold in last, as everywhere.
+    """
+    R = sharded.n_shards
+    m, k = splan.plan.m, splan.plan.k
+    d = q_vecs.shape[1]
+    arena = sharded.base
+    kprime = max(k, int(cfg.refine_factor) * k)
+    M = arena.codes.shape[1]
+
+    used = np.unique(
+        np.concatenate(
+            [u.qrows for units in splan.plan.buckets.values() for u in units]
+        )
+    )
+    lut_pos = np.zeros(m, dtype=np.int64)
+    lut_pos[used] = np.arange(len(used))
+    luts_dev = jnp.asarray(adc_tables(arena.pq, q_vecs[used]))  # [U, M, 256]
+
+    n_slots = splan.plan.n_slots
+    cand_s = np.full((R, m, n_slots, kprime), -np.inf, dtype=np.float32)
+    cand_rows = np.full((R, m, n_slots, kprime), -1, dtype=np.int64)
+
+    for lp in splan.pads:
+        unit_lists, _, valid, qrow_of, slot_of, Vrows, wmask = _assemble_bucket_stacked(
+            splan, sharded, lp, q_vecs, with_q=False
+        )
+        codes = np.zeros(valid.shape + (M,), dtype=np.uint8)
+        for r in range(R):
+            if not unit_lists[r]:
+                continue
+            codes[r] = arena.codes[Vrows[r]]
+            sstats.per_rank_bytes[r] += len(unit_lists[r]) * lp * M
+            sstats.per_rank_dispatches[r] += 1
+        if stats is not None:
+            stats.bytes_scanned += int(sum(len(u) for u in unit_lists)) * lp * M
+        lut_idx = lut_pos[np.maximum(qrow_of, 0)]  # padding slots -> LUT row 0
+        kk = min(kprime, lp)
+        s, i_loc = kops.sharded_workunit_pq_topk(
+            mesh, axis,
+            luts_dev, jnp.asarray(lut_idx), jnp.asarray(codes), jnp.asarray(valid), kk,
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+        )
+        s = np.asarray(s)
+        i_loc = np.asarray(i_loc)
+        for r in range(R):
+            if not unit_lists[r]:
+                continue
+            packed_rows = np.take_along_axis(
+                np.broadcast_to(Vrows[r][:, None, :], i_loc[r].shape[:2] + (lp,)),
+                np.maximum(i_loc[r], 0),
+                axis=2,
+            )
+            packed_rows = np.where(i_loc[r] < 0, -1, packed_rows)  # global rows
+            qr, sl = qrow_of[r][wmask[r]], slot_of[r][wmask[r]]
+            cand_s[r, qr, sl, :kk] = s[r][wmask[r]]
+            cand_rows[r, qr, sl, :kk] = packed_rows[wmask[r]]
+
+    # global top-k' ADC candidates: k'·|model| gather, identical selection to
+    # the single-device merge (a global survivor survives locally too)
+    _, top_rows = _gather_merge(mesh, axis, cand_s, cand_rows, kprime)
+    sstats.gathered_per_query += R * kprime
+    rows = top_rows  # [m, k'] global packed rows (-1 pad)
+
+    # sharded exact re-rank: rank r rescans the surviving rows IT stores
+    mp = _next_pow2(m, 1)
+    Qr = np.zeros((R, mp, 1, d), dtype=np.float32)
+    Qr[:, :m, 0] = q_vecs[None]
+    Vr = np.zeros((R, mp, kprime, d), dtype=np.float32)
+    valid_r = np.zeros((R, mp, kprime), dtype=bool)
+    owner = sharded.owner_of_row(np.maximum(rows, 0))
+    for r in range(R):
+        own = (owner == r) & (rows >= 0)
+        if not own.any():
+            continue
+        sel = arena.packed[rows[own]]
+        Vr[r, :m][own] = sel
+        valid_r[r, :m] = own
+        sstats.per_rank_bytes[r] += sel.nbytes
+        sstats.per_rank_dispatches[r] += 1
+        if stats is not None:
+            stats.bytes_scanned += sel.nbytes
+    kk = min(k, kprime)
+    s, i_loc = kops.sharded_workunit_topk(
+        mesh, axis,
+        jnp.asarray(Qr), jnp.asarray(Vr), jnp.asarray(valid_r), kk,
+        metric=arena.metric,
+        use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+    )
+    s = np.asarray(s)[:, :m, 0]  # [R, m, kk] exact partial scores
+    i_loc = np.asarray(i_loc)[:, :m, 0]  # [R, m, kk] index into the k' candidates
+    rows_b = np.broadcast_to(rows[None], (R, m, kprime))
+    packed_rows = np.take_along_axis(
+        rows_b, np.maximum(i_loc, 0).astype(np.int64), axis=2
+    )
+    gidx = np.where(i_loc < 0, -1, arena.gid[np.maximum(packed_rows, 0)])
+    gidx = np.where(packed_rows < 0, -1, gidx)
+    sc = np.where(gidx >= 0, s, -np.inf).astype(np.float32)
+
+    ms, mi = _gather_merge(
+        mesh, axis, sc[:, :, None, :], gidx[:, :, None, :], k
+    )
+    sstats.gathered_per_query += R * k
+    return _merge_with_extras(ms, mi, extra, k)
+
+
 def batch_search_ivf(
     ivf: IVFIndex,
     q_vecs: np.ndarray,  # [m, d] — one template group
@@ -349,8 +747,18 @@ def batch_search_ivf(
     stats: Optional[ScanStats] = None,
     cfg: Optional[PlanConfig] = None,
     pq: Optional[PQCodebook] = None,  # required iff cfg.scan_mode == "pq"
+    mesh=None,  # jax.sharding.Mesh: shard the scan over its model axis
+    shard_spec=None,  # core.distributed.ShardSpec (default axes)
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Plan + execute one IVF index: (scores f32 [m, k], local idx i64 [m, k])."""
+    """Plan + execute one IVF index: (scores f32 [m, k], local idx i64 [m, k]).
+
+    With ``mesh=`` the index is a single qd-tree-less partition, so sharding
+    falls back to posting-list-block granularity: the arena's packed rows
+    split into contiguous row slices per model rank (the single partition is
+    viewed as |model| pseudo-partitions along posting-list boundaries) and
+    execution runs through ``core.distributed.execute_sharded`` — results
+    stay bit-identical to ``mesh=None``.
+    """
     cfg = PlanConfig() if cfg is None else cfg
     m = q_vecs.shape[0]
     if m == 0:
@@ -373,5 +781,15 @@ def batch_search_ivf(
         nprobe=int(min(nprobe, ivf.n_lists)),
         packed_bitmap=packed_bitmap,
     )
+    if mesh is not None:
+        from .distributed import ShardSpec, execute_sharded
+
+        spec = shard_spec or ShardSpec()
+        sharded = PackedArena.sharded_from_ivf(ivf, spec.n_shards(mesh))
+        s, i, _ = execute_sharded(
+            sharded, [task], q_vecs,
+            mesh=mesh, spec=spec, m=m, k=k, cfg=cfg, stats=stats,
+        )
+        return s, i
     plan = build_plan(arena, [task], q_vecs, m=m, k=k, cfg=cfg, stats=stats)
     return execute_plan(plan, arena, q_vecs, cfg=cfg, stats=stats)

@@ -223,6 +223,9 @@ class SearchResult:
     scores: np.ndarray
     tuples_scanned: int = 0  # distance computations performed (paper metric 2)
     bytes_scanned: int = 0  # arena bytes gathered by the engine's scan stages
+    # per-rank accounting when the search ran on a device mesh
+    # (core.planner.ShardStats; annotated loosely so types stays import-light)
+    shard_stats: Optional[object] = None
 
     @property
     def k(self) -> int:

@@ -146,6 +146,29 @@ def _batched_masked_topk_jnp(q, v, valid, k, metric):
     return jax.vmap(lambda a, b, c: _ref.masked_topk_ref(a, b, c, k, metric))(q, v, valid)
 
 
+def _unit_scan_fn(k: int, metric: str, use_pallas: bool, interpret: bool):
+    """Per-rank/per-bucket work-unit scan body: the ONE place the kernel
+    choice lives (db-stationary grid when the vector tile dominates the
+    query tile), shared by ``workunit_topk`` and the sharded wrapper so the
+    single-device and sharded paths can never diverge on dispatch
+    heuristics."""
+
+    def scan(q, v, valid):  # [W, TQ, D], [W, TV, D], [W, TV]
+        if use_pallas:
+            from .fused_knn import fused_knn, fused_knn_db_stationary
+
+            if v.shape[1] >= _DB_STATIONARY_RATIO * max(int(q.shape[1]), 1):
+                fn = functools.partial(
+                    fused_knn_db_stationary, k=k, metric=metric, interpret=interpret
+                )
+            else:
+                fn = functools.partial(fused_knn, k=k, metric=metric, interpret=interpret)
+            return jax.vmap(fn)(q, v, valid)
+        return jax.vmap(lambda a, b, c: _ref.masked_topk_ref(a, b, c, k, metric))(q, v, valid)
+
+    return scan
+
+
 def workunit_topk(
     q: jax.Array,  # [W, TQ, D]  one bucket's work units (see core/plan.py)
     v: jax.Array,  # [W, TV, D]
@@ -162,21 +185,13 @@ def workunit_topk(
     and templates — to a single call. On the Pallas path this picks the
     db-stationary grid of ``fused_knn`` when the vector tile dominates the
     query tile (NV ≫ NQ, the batch-serving shape), and the query-stationary
-    grid otherwise.
+    grid otherwise (``_unit_scan_fn``).
     """
     _DISPATCH.record_knn((q.shape[0], q.shape[1], v.shape[1], int(k)))
     use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
     interpret = _DEFAULT_INTERPRET if interpret is None else interpret
     if use_pallas:
-        from .fused_knn import fused_knn, fused_knn_db_stationary
-
-        if v.shape[1] >= _DB_STATIONARY_RATIO * max(int(q.shape[1]), 1):
-            fn = functools.partial(
-                fused_knn_db_stationary, k=k, metric=metric, interpret=interpret
-            )
-        else:
-            fn = functools.partial(fused_knn, k=k, metric=metric, interpret=interpret)
-        return jax.vmap(lambda a, b, c: fn(a, b, c))(q, v, valid)
+        return _unit_scan_fn(int(k), metric, True, interpret)(q, v, valid)
     return _batched_masked_topk_jnp(q, v, valid, k, metric)
 
 
@@ -212,6 +227,177 @@ def workunit_pq_topk(
 @functools.partial(jax.jit, static_argnames=("k",))
 def _workunit_pq_topk_jnp(luts, codes, valid, k):
     return _ref.workunit_pq_topk_ref(luts, codes, valid, k)
+
+
+# --------------------------------------------------------------------------
+# Sharded dispatch (device-mesh execution, see core/planner.py's sharded path)
+#
+# Each wrapper runs ONE shard_map over the mesh's model axis: the leading dim
+# of every stacked operand is the rank axis, so rank r executes exactly its
+# own slice with the same per-unit math as the single-device kernels (results
+# are bit-identical, which the mesh-parity suite asserts). The scan/ADC
+# wrappers are collective-free; the only cross-rank traffic in the engine is
+# ``sharded_merge_topk``'s all-gather of per-query top-k candidates —
+# O(k · |model|) floats+ids per query, never distance rows.
+
+_SHARDED_FN_CACHE: dict = {}
+
+
+def _sharded_cached(key, build):
+    fn = _SHARDED_FN_CACHE.get(key)
+    if fn is None:
+        fn = _SHARDED_FN_CACHE[key] = build()
+    return fn
+
+
+def _shard_map(local, mesh, axis, n_in, n_out, *, out_sharded: bool):
+    """shard_map sharding the leading (rank) dim of every operand; outputs
+    are rank-major sharded (scan stages) or replicated (the gather merge)."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..distributed.sharding import shard_map_compat
+
+    out = P(axis) if out_sharded else P(None)
+    return shard_map_compat(
+        local,
+        mesh=mesh,
+        in_specs=tuple(P(axis) for _ in range(n_in)),
+        out_specs=tuple(out for _ in range(n_out)),
+    )
+
+
+def sharded_workunit_topk(
+    mesh,
+    axis: str,
+    q: jax.Array,  # f32 [R, W, TQ, D] — rank r's work units at [r]
+    v: jax.Array,  # f32 [R, W, TV, D]
+    valid: jax.Array,  # bool [R, W, TV]
+    k: int,
+    *,
+    metric: str = "ip",
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """``workunit_topk`` across the mesh: one dispatch, every rank its slice.
+
+    The leading dim must equal ``mesh.shape[axis]``; other mesh axes (data,
+    pod) replicate — batch parallelism splits the query stream host-side.
+    Collective-free: outputs stay rank-major [R, W, TQ, kk] for the host-side
+    scatter into per-rank candidate tensors.
+    """
+    R = q.shape[0]
+    _DISPATCH.record_knn(("sh", R, q.shape[1], q.shape[2], v.shape[2], int(k)))
+    use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    key = ("wu", mesh, axis, q.shape, v.shape, int(k), metric, use_pallas, interpret)
+
+    def build():
+        scan = _unit_scan_fn(int(k), metric, use_pallas, interpret)
+
+        def local(ql, vl, validl):  # leading dim R/R == 1 per rank
+            s, i = scan(ql[0], vl[0], validl[0])
+            return s[None], i[None]
+
+        return jax.jit(_shard_map(local, mesh, axis, 3, 2, out_sharded=True))
+
+    return _sharded_cached(key, build)(q, v, valid)
+
+
+def sharded_workunit_pq_topk(
+    mesh,
+    axis: str,
+    luts: jax.Array,  # f32 [U, M, 256] — resident ADC tables, REPLICATED
+    lut_idx: jax.Array,  # i64 [R, W, TQ] — per-slot row into ``luts``
+    codes: jax.Array,  # uint8 [R, W, TV, M] — rank r's gathered code tiles
+    valid: jax.Array,  # bool [R, W, TV]
+    k: int,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Compressed (ADC) sharded scan — ``workunit_pq_topk`` across the mesh.
+
+    The workload's ADC tables ship once, replicated; each rank expands its
+    per-unit [W, TQ, M, 256] LUT operand with an on-device gather (same
+    scheme as the single-device path) and scans only ITS code tiles.
+    Collective-free.
+    """
+    R = codes.shape[0]
+    _DISPATCH.record_knn(("sh-pq", R, codes.shape[1], lut_idx.shape[2], codes.shape[2], int(k)))
+    use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    key = (
+        "pq", mesh, axis, luts.shape, lut_idx.shape, codes.shape,
+        int(k), use_pallas, interpret,
+    )
+
+    def build():
+        from jax.sharding import PartitionSpec as P
+
+        from ..distributed.sharding import shard_map_compat
+
+        def local(luts_l, idx_l, codes_l, valid_l):
+            per_unit = jnp.take(luts_l, idx_l[0], axis=0)  # [W, TQ, M, 256]
+            if use_pallas:
+                from .pq_scan import workunit_pq_scan
+
+                s, i = workunit_pq_scan(
+                    per_unit, codes_l[0], valid_l[0], k=int(k), interpret=interpret
+                )
+            else:
+                s, i = _ref.workunit_pq_topk_ref(per_unit, codes_l[0], valid_l[0], int(k))
+            return s[None], i[None]
+
+        fn = shard_map_compat(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(axis), P(axis), P(axis)),
+            out_specs=(P(axis), P(axis)),
+        )
+        return jax.jit(fn)
+
+    return _sharded_cached(key, build)(luts, lut_idx, codes, valid)
+
+
+def sharded_merge_topk(
+    mesh,
+    axis: str,
+    scores: jax.Array,  # f32 [R, m, C] — rank r's candidate rows at [r]
+    idx: jax.Array,  # i64 [R, m, C] — GLOBAL candidate ids (-1 = absent)
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """The engine's only cross-rank step: per-query top-k candidate gather.
+
+    Each rank first reduces its own C candidate columns to its local top-k —
+    on-device, collective-free — then ONE all-gather over ``axis`` moves the
+    [m, k] survivors (k·|model| candidates per query, independent of DB and
+    candidate-tensor size) and a final fused top-k selects the global result,
+    replicated to every rank. This is Alg. 3's merge lifted onto the mesh:
+    distance rows never cross ranks.
+    """
+    _DISPATCH.record_merge()
+    key = ("mg", mesh, axis, scores.shape, idx.dtype, int(k))
+
+    def build():
+        def local(sl, il):  # [1, m, C] per rank
+            top, pos = jax.lax.top_k(sl[0], int(k))
+            li = jnp.take_along_axis(il[0], pos.astype(il.dtype), axis=1)
+            top = jnp.where(li < 0, -jnp.inf, top)
+            li = jnp.where(jnp.isfinite(top), li, -1)
+            all_s = jax.lax.all_gather(top, axis)  # [R, m, k] — THE comm step
+            all_i = jax.lax.all_gather(li, axis)
+            m = sl.shape[1]
+            cat_s = jnp.moveaxis(all_s, 0, 1).reshape(m, -1)
+            cat_i = jnp.moveaxis(all_i, 0, 1).reshape(m, -1)
+            t, p = jax.lax.top_k(cat_s, int(k))
+            oi = jnp.take_along_axis(cat_i, p.astype(cat_i.dtype), axis=1)
+            t = jnp.where(oi < 0, -jnp.inf, t)
+            oi = jnp.where(jnp.isfinite(t), oi, -1)
+            return t, oi
+
+        return jax.jit(_shard_map(local, mesh, axis, 2, 2, out_sharded=False))
+
+    return _sharded_cached(key, build)(scores, idx)
 
 
 def merge_topk(

@@ -35,7 +35,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from ..configs import ARCHS, get_config, optimizer_for  # noqa: E402
 from ..configs.shapes import SHAPES, shapes_for  # noqa: E402
-from ..core.distributed import make_search_step, search_step_specs  # noqa: E402
+from ..core.distributed import make_roofline_search_step, roofline_search_specs  # noqa: E402
 from ..distributed.sharding import ShardingRules, tree_param_specs, use_rules  # noqa: E402
 from ..models import api  # noqa: E402
 from ..models.transformer import ModelConfig  # noqa: E402
@@ -150,8 +150,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool) -> Dict[str, Any]:
 
     if arch == "hqi-search":
         spec = HQI_SEARCH_SHAPES[shape_name]
-        step = make_search_step(mesh, k=10, metric="ip")
-        in_sds = search_step_specs(mesh, **spec)
+        step = make_roofline_search_step(mesh, k=10, metric="ip")
+        in_sds = roofline_search_specs(mesh, **spec)
         with mesh:
             lowered = step.lower(*in_sds)
             compiled = lowered.compile()

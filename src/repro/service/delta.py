@@ -27,6 +27,7 @@ power-of-two shapes so it reuses compiled kernels across flushes.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
@@ -117,6 +118,20 @@ class DeltaStore:
 
     # ----------------------------------------------------------------- reads
 
+    def view(self) -> "DeltaView":
+        """Immutable scan snapshot (db slab, live mask, id base).
+
+        The lock-free flush path captures this under the service lock and
+        scans OUTSIDE it: the slab is replaced (never mutated) by ``insert``
+        and the live mask is copied here, so a concurrent writer can't shift
+        the snapshot under the scan.
+        """
+        return DeltaView(
+            db=self._db,
+            live=~self._dead.copy(),
+            first_id=self.first_id,
+        )
+
     def scan(
         self,
         workload: Workload,
@@ -130,10 +145,39 @@ class DeltaStore:
         one ``workunit_topk`` dispatch, one work unit per flush template,
         shapes padded to powers of two for compile reuse.
         """
-        if self._db is None or not (~self._dead).any():
+        return self.view().scan(workload, stats=stats)
+    # --------------------------------------------------------------- refresh
+
+    def snapshot(self) -> Tuple[Optional[VectorDatabase], np.ndarray]:
+        """(buffered rows incl. tombstoned, live mask) — the refresh fold input."""
+        return self._db, ~self._dead.copy()
+
+    def clear(self, first_id: int) -> None:
+        """Reset after a fold; subsequent inserts continue from ``first_id``."""
+        self._db = None
+        self._dead = np.zeros(0, dtype=bool)
+        self.first_id = int(first_id)
+
+
+@dataclasses.dataclass
+class DeltaView:
+    """A consistent point-in-time scan view of the buffer (see ``view()``)."""
+
+    db: Optional[VectorDatabase]
+    live: np.ndarray  # bool — alive among the snapshot's buffered rows
+    first_id: int
+
+    def scan(
+        self,
+        workload: Workload,
+        *,
+        stats: Optional[ScanStats] = None,
+    ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
+        """Brute-force top-k over the snapshot's live rows, per query."""
+        db = self.db
+        if db is None or not self.live.any():
             return None
-        db = self._db
-        live = ~self._dead
+        live = self.live
         k, m, d = workload.k, workload.m, db.d
         groups = []  # (qidx, bitmap over buffered rows)
         for ti, filt in enumerate(workload.templates):
@@ -174,15 +218,3 @@ class DeltaStore:
             out_s[qidx, :kk] = s[w, :nq]
         out_s = np.where(out_i < 0, -np.inf, out_s)
         return out_s, out_i
-
-    # --------------------------------------------------------------- refresh
-
-    def snapshot(self) -> Tuple[Optional[VectorDatabase], np.ndarray]:
-        """(buffered rows incl. tombstoned, live mask) — the refresh fold input."""
-        return self._db, ~self._dead.copy()
-
-    def clear(self, first_id: int) -> None:
-        """Reset after a fold; subsequent inserts continue from ``first_id``."""
-        self._db = None
-        self._dead = np.zeros(0, dtype=bool)
-        self.first_id = int(first_id)

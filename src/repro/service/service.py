@@ -22,6 +22,14 @@ The service can be driven synchronously (``tick``/``drain`` — what the
 benchmarks and tests do) or by a background thread (``start``/``stop``) with
 callers blocking on ``QueryHandle.wait()``; kernel-dispatch accounting stays
 correct either way because ``DispatchStats`` is lock-protected.
+
+Flushes are lock-free for writers: ``_flush`` snapshots (batch, live mask,
+delta view) under the state lock, dispatches the kernel pipeline outside it,
+and re-acquires only to fulfill handles — ``submit``/``insert``/``delete``
+during a slow flush queue into the next micro-batch instead of blocking
+(tests/test_service.py has the threaded regression). When the index was
+built with ``HQIConfig.mesh`` set, every flush's engine work runs on the
+device mesh through the sharded executor, transparently.
 """
 from __future__ import annotations
 
@@ -108,10 +116,14 @@ class HQIService:
         self.delta = DeltaStore(index.db, first_id=index.db.n)
         self.telemetry = ServiceTelemetry()
         self._live = np.ones(index.db.n, dtype=bool)  # tombstones over indexed rows
-        # one lock for scheduler + delta + live-mask + index mutation: a flush
-        # must see a consistent DB state, and refresh() swaps structures out
-        # from under search
+        # state lock for scheduler + delta + live-mask: writers and the flush
+        # snapshot take it BRIEFLY — kernel dispatch happens outside it, so
+        # submit()/insert()/delete() never block for a flush's duration
         self._lock = threading.RLock()
+        # flush lock serializes the out-of-lock pipeline sections: flushes
+        # against each other (single logical consumer) and against refresh(),
+        # which swaps index structures the in-flight search reads
+        self._flush_lock = threading.Lock()
         self._next_qid = 0
         self._thread: Optional[threading.Thread] = None
         self._stop_flag = threading.Event()
@@ -184,8 +196,12 @@ class HQIService:
         Algorithm-1/k-means re-run. Invalidates the Router bitmap cache
         (bitmaps are [db.n] and the DB grew). Tombstoned delta rows fold in
         as dead rows so global ids stay dense. Returns #rows folded.
+
+        Takes the flush lock first (same order as ``_flush``): the fold
+        mutates index structures an in-flight flush would be reading outside
+        the state lock.
         """
-        with self._lock:
+        with self._flush_lock, self._lock:
             delta_db, delta_live = self.delta.snapshot()
             if delta_db is None:
                 return 0
@@ -201,14 +217,17 @@ class HQIService:
         with self._lock:
             if not self.scheduler.ready(now):
                 return 0
-            return self._flush()
+        return self._flush(ready_only=True, now=now)
 
     def flush(self) -> int:
-        """Force a flush of whatever is pending (ignores triggers)."""
-        with self._lock:
-            if len(self.scheduler) == 0:
-                return 0
-            return self._flush()
+        """Force a flush of whatever is pending (ignores triggers).
+
+        No empty-queue fast path on purpose: ``_flush`` serializes on the
+        flush lock, so even a 0 return waits out any in-flight flush —
+        keeping ``drain()``'s contract that returning means every previously
+        submitted query has been answered, not merely taken.
+        """
+        return self._flush()
 
     def drain(self) -> int:
         """Flush until the queue is empty; returns #queries answered."""
@@ -219,40 +238,66 @@ class HQIService:
                 return total
             total += n
 
-    def _flush(self) -> int:
-        """One micro-batch through engine + delta + merge (lock held)."""
-        batch = self.scheduler.take()
-        depth = len(self.scheduler)
-        wl, n_real = self.scheduler.build_workload(batch, self.cfg.k)
-        before = kops.dispatch_stats().snapshot()
-        t0 = time.perf_counter()
-        ids, scores = self._answer(wl)
-        dt = time.perf_counter() - t0
-        after = kops.dispatch_stats().snapshot()
-        t_done = time.perf_counter()
-        lats = []
-        for i, pq in enumerate(batch):
-            pq.handle._fulfill(ids[i], scores[i], t_done)
-            lats.append(t_done - pq.t_submit)
-        self.telemetry.record_flush(
-            size=n_real,
-            queue_depth=depth,
-            knn_dispatches=after.knn_calls - before.knn_calls,
-            merge_dispatches=after.merge_calls - before.merge_calls,
-            seconds=dt,
-            latencies=lats,
-        )
+    def _flush(self, ready_only: bool = False, now: Optional[float] = None) -> int:
+        """One micro-batch through engine + delta + merge — lock-free pipeline.
+
+        Three phases: (1) snapshot the batch, live mask, and delta view under
+        the state lock; (2) dispatch the whole kernel pipeline OUTSIDE it, so
+        concurrent ``submit``/``insert``/``delete`` queue into the next
+        micro-batch instead of blocking for the flush duration; (3) re-acquire
+        to fulfill handles and record telemetry. Flushes serialize among
+        themselves (and against ``refresh``) on the flush lock; ``ready_only``
+        (the ``tick`` path) re-checks the trigger once inside it, so a caller
+        that queued behind another flush doesn't prematurely flush queries
+        that arrived meanwhile and are still inside the batching window.
+        """
+        with self._flush_lock:
+            with self._lock:
+                if ready_only and not self.scheduler.ready(now):
+                    return 0
+                batch = self.scheduler.take()
+                if not batch:
+                    return 0
+                depth = len(self.scheduler)
+                wl, n_real = self.scheduler.build_workload(batch, self.cfg.k)
+                live = self._live.copy()
+                delta_view = self.delta.view()
+            before = kops.dispatch_stats().snapshot()
+            t0 = time.perf_counter()
+            ids, scores = self._answer(wl, live, delta_view)
+            dt = time.perf_counter() - t0
+            after = kops.dispatch_stats().snapshot()
+            t_done = time.perf_counter()
+            with self._lock:
+                lats = []
+                for i, pq in enumerate(batch):
+                    pq.handle._fulfill(ids[i], scores[i], t_done)
+                    lats.append(t_done - pq.t_submit)
+                self.telemetry.record_flush(
+                    size=n_real,
+                    queue_depth=depth,
+                    knn_dispatches=after.knn_calls - before.knn_calls,
+                    merge_dispatches=after.merge_calls - before.merge_calls,
+                    seconds=dt,
+                    latencies=lats,
+                )
         return n_real
 
-    def _answer(self, wl: Workload) -> Tuple[np.ndarray, np.ndarray]:
-        """(ids i64 [m, k], scores f32 [m, k]): engine + delta, merged."""
+    def _answer(
+        self, wl: Workload, live: np.ndarray, delta_view
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids i64 [m, k], scores f32 [m, k]): engine + delta, merged.
+
+        Operates on the flush's snapshots (live mask copy, immutable delta
+        view) so it can run outside the state lock.
+        """
         res = self.index.search(
             wl,
             nprobe=self.cfg.nprobe,
             batch_vec=self.cfg.batch_vec,
-            live_mask=self._live,
+            live_mask=live,
         )
-        delta_out = self.delta.scan(wl, stats=ScanStats())
+        delta_out = delta_view.scan(wl, stats=ScanStats())
         if delta_out is None:
             return res.ids, res.scores
         ds, di = delta_out

@@ -23,27 +23,33 @@ def run_with_devices(code: str, n: int = 8) -> str:
     return r.stdout
 
 
-def test_distributed_search_matches_reference():
-    """shard_map index-sharded search == single-device masked top-k."""
+def test_distributed_hqi_search_matches_single_device():
+    """HQI search through the sharded engine on a (data, model) mesh is
+    bit-identical to the single-device engine — bitmap pushdown, per-template
+    nprobe, and the adaptive path included (the deep sweep lives in
+    tests/test_engine_sharded.py)."""
     run_with_devices("""
-        import numpy as np, jax, jax.numpy as jnp
+        import sys, numpy as np, jax
+        sys.path.insert(0, %r)
+        from conftest import small_db, small_workload
+        from repro.core import HQIConfig, HQIIndex
         from repro.launch.mesh import make_test_mesh
-        from repro.core.distributed import make_search_step
-        from repro.kernels.ref import masked_topk_ref
 
-        mesh = make_test_mesh((2, 4), ("data", "model"))
-        step = make_search_step(mesh, k=5, metric="ip")
-        rng = np.random.default_rng(0)
-        db = jnp.asarray(rng.normal(size=(160, 16)).astype(np.float32))
-        bitmap = jnp.asarray(rng.random(160) > 0.4)
-        q = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
-        with mesh:
-            s, i = step(db, bitmap, q)
-        s2, i2 = masked_topk_ref(q, db, bitmap, 5, "ip")
-        np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-5, atol=1e-5)
-        assert set(np.asarray(i).ravel().tolist()) == set(np.asarray(i2).ravel().tolist())
-        print("distributed search OK")
-    """)
+        db = small_db()
+        wl = small_workload(db)
+        hqi = HQIIndex.build(db, wl, HQIConfig(min_partition_size=128, max_leaves=32))
+        ref = hqi.search(wl, nprobe=6, batch_vec=True)
+        hqi.cfg.mesh = make_test_mesh((2, 4), ("data", "model"))
+        res = hqi.search(wl, nprobe=6, batch_vec=True)
+        assert np.array_equal(ref.scores, res.scores)
+        assert np.array_equal(ref.ids, res.ids)
+        st = res.shard_stats
+        assert st is not None and st.n_shards == 4
+        # cross-rank traffic is the per-query candidate gather: O(k·|model|)
+        assert st.gathered_per_query == 4 * wl.k, st.gathered_per_query
+        assert st.per_rank_bytes.sum() > 0
+        print("distributed HQI search OK")
+    """ % os.path.join(REPO, "tests"))
 
 
 def test_pjit_train_step_on_mesh():

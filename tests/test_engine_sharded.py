@@ -1,0 +1,376 @@
+"""Mesh-parity suite: the sharded engine must be BIT-IDENTICAL to the
+single-device engine.
+
+Every test spawns a subprocess with 8 virtual host devices
+(``--xla_force_host_platform_device_count``, the test_distributed.py
+harness) and sweeps mesh sizes {1, 2, 4, 8} *inside* one subprocess —
+``make_test_mesh((R,), ("model",))`` takes a prefix of the device pool, so
+one jax init serves every mesh size. Assertions are exact array equality of
+ids AND scores (``use_pallas=False`` pins both paths to the jnp kernels so
+the comparison is bitwise-meaningful regardless of the CI backend matrix).
+
+Covered: metrics {ip, l2} × scan_mode {"f32", "pq"}, bitmap pushdown, the
+adaptive per-query path, per-template nprobe dicts; edges: shard-skewed
+splits, an empty shard, k larger than any shard's rows, all-false bitmaps.
+Communication structure: ShardStats.gathered_per_query must be exactly
+O(k·|model|) and independent of DB size. The hypothesis property test
+(random workloads × random shard bounds) additionally asserts per-rank work
+units always PARTITION the single-device plan's units.
+"""
+import os
+import textwrap
+
+import pytest
+
+from test_distributed import REPO, run_with_devices
+
+TESTS = os.path.join(REPO, "tests")
+
+
+def run(body: str, n: int = 8) -> str:
+    """run_with_devices with the shared prelude (dedent body first: the
+    prelude sits at column 0, so the harness's own dedent would no-op)."""
+    return run_with_devices(PRELUDE + textwrap.dedent(body), n=n)
+
+# Shared subprocess prelude: data + index builders and the exact-parity
+# assertion. Mesh sizes take prefixes of the 8-device pool.
+PRELUDE = f"""
+import sys
+sys.path.insert(0, {TESTS!r})
+import numpy as np, jax
+from jax.sharding import Mesh
+from conftest import small_db, small_workload
+from repro.core import HQIConfig, HQIIndex, PackedArena
+from repro.core.ivf import IVFIndex
+from repro.core.plan import PlanConfig
+from repro.core.planner import batch_search_ivf
+from repro.core.pq import train_pq
+
+MESH_SIZES = (1, 2, 4, 8)
+
+def mesh_of(r):
+    return Mesh(np.asarray(jax.devices()[:r]), ("model",))
+
+def assert_exact(a_s, a_i, b_s, b_i, ctx=""):
+    assert np.array_equal(a_s, b_s), f"scores diverge {{ctx}}"
+    assert np.array_equal(a_i, b_i), f"ids diverge {{ctx}}"
+"""
+
+
+def test_sharded_ivf_parity_f32():
+    """batch_search_ivf(mesh=...) == batch_search_ivf: both metrics, with and
+    without bitmap pushdown, every mesh size."""
+    run("""
+        rng = np.random.default_rng(11)
+        for metric in ("ip", "l2"):
+            db = small_db(n=900, seed=11, metric=metric)
+            ivf = IVFIndex.build(db.vectors, metric=metric, n_centroids=16, seed=0)
+            q = rng.normal(size=(23, db.d)).astype(np.float32)
+            cfg = PlanConfig(tq_unit=8, min_list_pad=8, use_pallas=False)
+            for bitmap in (None, rng.random(db.n) < 0.4):
+                ss, si = batch_search_ivf(ivf, q, nprobe=6, k=5, bitmap=bitmap, cfg=cfg)
+                for R in MESH_SIZES:
+                    bs, bi = batch_search_ivf(
+                        ivf, q, nprobe=6, k=5, bitmap=bitmap, cfg=cfg, mesh=mesh_of(R)
+                    )
+                    assert_exact(ss, si, bs, bi, f"{metric} R={R} bitmap={bitmap is not None}")
+        print("sharded ivf f32 parity OK")
+    """)
+
+
+def test_sharded_ivf_parity_pq():
+    """Compressed execution (ADC scan -> exact re-rank) sharded == single."""
+    run("""
+        rng = np.random.default_rng(7)
+        for metric in ("ip", "l2"):
+            db = small_db(n=900, seed=7, metric=metric)
+            ivf = IVFIndex.build(db.vectors, metric=metric, n_centroids=16, seed=0)
+            pq = train_pq(db.vectors, 4, metric=metric, iters=4, seed=0)
+            q = rng.normal(size=(23, db.d)).astype(np.float32)
+            cfg = PlanConfig(
+                tq_unit=8, min_list_pad=8, scan_mode="pq", refine_factor=2,
+                use_pallas=False,
+            )
+            bitmap = rng.random(db.n) < 0.5
+            for bm in (None, bitmap):
+                ss, si = batch_search_ivf(ivf, q, nprobe=6, k=5, bitmap=bm, cfg=cfg, pq=pq)
+                for R in MESH_SIZES:
+                    bs, bi = batch_search_ivf(
+                        ivf, q, nprobe=6, k=5, bitmap=bm, cfg=cfg, pq=pq, mesh=mesh_of(R)
+                    )
+                    assert_exact(ss, si, bs, bi, f"pq {metric} R={R}")
+        print("sharded ivf pq parity OK")
+    """)
+
+
+def test_sharded_hqi_parity():
+    """Full HQI workloads through cfg.mesh: multi-partition arena, template
+    bitmaps, nprobe dicts, and the adaptive executor mixing sharded buckets
+    with host-side per-query scans — all bit-identical to mesh=None."""
+    run("""
+        db = small_db()
+        wl = small_workload(db)
+        nprobe_dict = {ti: 3 + (ti % 4) for ti in range(len(wl.templates))}
+        for scan_kw in ({}, dict(scan_mode="pq", pq_m=4)):
+            hqi = HQIIndex.build(db, wl, HQIConfig(
+                min_partition_size=128, max_leaves=32,
+                plan=PlanConfig(adaptive_crossover=8, use_pallas=False), **scan_kw))
+            refs = {
+                (bv, npk): hqi.search(wl, nprobe=(nprobe_dict if npk else 6), batch_vec=bv)
+                for bv in (True, "auto") for npk in (False, True)
+            }
+            for R in MESH_SIZES:
+                hqi.cfg.mesh = mesh_of(R)
+                for (bv, npk), ref in refs.items():
+                    res = hqi.search(wl, nprobe=(nprobe_dict if npk else 6), batch_vec=bv)
+                    assert_exact(ref.scores, ref.ids, res.scores, res.ids,
+                                 f"{scan_kw} R={R} bv={bv} npdict={npk}")
+                    st = res.shard_stats
+                    assert st is not None and st.n_shards == R
+                    assert st.per_rank_units.sum() > 0  # engine work ran sharded
+            hqi.cfg.mesh = None
+        print("sharded hqi parity OK")
+    """)
+
+
+def test_sharded_edge_cases():
+    """Skewed splits, an empty shard, k > any shard's rows, all-false
+    bitmaps, and m=0 workloads all behave exactly like a single device."""
+    run("""
+        from repro.core.distributed import execute_sharded
+        from repro.core.plan import EngineTask
+        from repro.core.predicates import Between, make_filter
+        from repro.core.types import Workload
+
+        rng = np.random.default_rng(3)
+        db = small_db(n=700, seed=3)
+        ivf = IVFIndex.build(db.vectors, metric=db.metric, n_centroids=12, seed=0)
+        arena = PackedArena.from_ivf(ivf)
+        q = rng.normal(size=(17, db.d)).astype(np.float32)
+        cfg = PlanConfig(tq_unit=8, min_list_pad=8, use_pallas=False)
+        k = 200  # > any shard's probed rows (3 lists x ~58 rows per query)
+        ss, si = batch_search_ivf(ivf, q, nprobe=3, k=k, cfg=cfg)
+        assert (si == -1).any()  # padding exists even on one device
+        task = EngineTask(part=0, qrows=np.arange(17, dtype=np.int64),
+                          nprobe=3, packed_bitmap=None)
+        G = arena.n_lists
+        mesh = mesh_of(4)
+        # skewed: rank 0 owns almost everything; rank 2 owns NOTHING (empty
+        # shard: all its would-be rows live on other ranks)
+        for bounds in ([0, G - 2, G - 1, G - 1, G], [0, 0, 1, G - 1, G]):
+            sharded = arena.shard(4, bounds=np.asarray(bounds))
+            assert (sharded.rows_per_shard == 0).any()
+            bs, bi, st = execute_sharded(
+                sharded, [task], q, mesh=mesh, m=17, k=k, cfg=cfg)
+            assert_exact(ss, si, bs, bi, f"bounds={bounds}")
+            empty = sharded.rows_per_shard == 0
+            assert (st.per_rank_units[empty] == 0).all()
+            assert (st.per_rank_bytes[empty] == 0).all()
+
+        # more ranks than posting lists can absorb evenly: non-pow2 mesh
+        sharded = arena.shard(7)
+        bs, bi, st = execute_sharded(
+            sharded, [task], q, mesh=mesh_of(7), m=17, k=k, cfg=cfg)
+        assert_exact(ss, si, bs, bi, "R=7")
+
+        # all-false bitmap through the HQI layer: (-inf, -1) everywhere
+        wl0 = small_workload(db, n_queries=7)
+        hqi = HQIIndex.build(db, wl0, HQIConfig(
+            min_partition_size=128, max_leaves=16, plan=PlanConfig(use_pallas=False)))
+        hqi.cfg.mesh = mesh
+        dead = Workload(
+            vectors=wl0.vectors[:7],
+            templates=[make_filter(Between("A", 5.0, 6.0))],  # A in [0,1): empty
+            template_of=np.zeros(7, dtype=np.int32), k=4)
+        res = hqi.search(dead, nprobe=6)
+        assert (res.ids == -1).all() and np.isneginf(res.scores).all()
+
+        # m=0 workload
+        none = Workload(vectors=np.zeros((0, db.d), np.float32),
+                        templates=[make_filter()],
+                        template_of=np.zeros(0, dtype=np.int32), k=4)
+        res = hqi.search(none, nprobe=6)
+        assert res.ids.shape == (0, 4)
+        print("sharded edge cases OK")
+    """)
+
+
+def test_sharded_comm_is_topk_gather_only():
+    """The candidate tensors crossing ranks are O(k·|model|) per query —
+    constant in DB size — and per-rank scan bytes split the single-device
+    scan ~1/|model| on balanced shards."""
+    run("""
+        from repro.core.distributed import execute_sharded
+        from repro.core.plan import EngineTask
+
+        rng = np.random.default_rng(5)
+        cfg = PlanConfig(tq_unit=8, min_list_pad=8, use_pallas=False)
+        k, m = 5, 16
+        gathered = {}
+        for n in (600, 2400):  # 4x the rows must not change gather width
+            vecs = rng.normal(size=(n, 24)).astype(np.float32)
+            ivf = IVFIndex.build(vecs, metric="ip", n_centroids=24, seed=0)
+            arena = PackedArena.from_ivf(ivf)
+            q = rng.normal(size=(m, 24)).astype(np.float32)
+            task = EngineTask(part=0, qrows=np.arange(m, dtype=np.int64),
+                              nprobe=8, packed_bitmap=None)
+            for R in (2, 8):
+                _, _, st = execute_sharded(
+                    arena.shard(R), [task], q, mesh=mesh_of(R), m=m, k=k, cfg=cfg)
+                gathered[(n, R)] = st.gathered_per_query
+                assert st.gathered_per_query == R * k, st.gathered_per_query
+                if n == 2400:
+                    # balanced shards: every rank scans well under the whole
+                    _, _, st1 = execute_sharded(
+                        arena.shard(1), [task], q, mesh=mesh_of(1), m=m, k=k, cfg=cfg)
+                    total = st1.per_rank_bytes[0]
+                    assert st.per_rank_bytes.sum() == total  # same scan, split
+                    assert st.per_rank_bytes.max() <= 2.5 * total / R
+        for R in (2, 8):
+            assert gathered[(600, R)] == gathered[(2400, R)]  # O(k·R), not O(n)
+        print("comm structure OK")
+    """)
+
+
+def test_sharded_dispatch_budget():
+    """Sharded dispatches stay O(#buckets): one collective scan dispatch per
+    shared pad (<= max_bucket_shapes) + one gather merge, regardless of mesh
+    size — and the shared shape ladder equals the single-device ladder."""
+    run("""
+        from repro.core import build_plan, build_plan_sharded
+        from repro.core.plan import EngineTask
+        from repro.kernels import ops
+
+        rng = np.random.default_rng(1)
+        db = small_db(n=2000, seed=1)
+        ivf = IVFIndex.build(db.vectors, metric=db.metric, n_centroids=64, seed=0)
+        arena = PackedArena.from_ivf(ivf)
+        q = rng.normal(size=(50, db.d)).astype(np.float32)
+        task = EngineTask(part=0, qrows=np.arange(50, dtype=np.int64),
+                          nprobe=16, packed_bitmap=None)
+        for budget in (1, 2, 4):
+            cfg = PlanConfig(max_bucket_shapes=budget, tq_unit=8, min_list_pad=8,
+                             use_pallas=False)
+            single = build_plan(arena, [task], q, m=50, k=5, cfg=cfg)
+            splan = build_plan_sharded(arena.shard(8), [task], q, m=50, k=5, cfg=cfg)
+            assert splan.pads == sorted(single.buckets)  # same compiled ladder
+            assert splan.n_dispatches <= budget
+            assert splan.per_rank_units.sum() == single.n_units
+            from repro.core.distributed import execute_sharded
+            ops.reset_dispatch_stats()
+            s, i = batch_search_ivf(ivf, q, nprobe=16, k=5, cfg=cfg, mesh=mesh_of(8))
+            st = ops.dispatch_stats()
+            assert 0 < st.knn_calls <= budget, st.knn_calls
+            assert st.merge_calls == 1
+            ss, si = batch_search_ivf(ivf, q, nprobe=16, k=5, cfg=cfg)
+            assert_exact(ss, si, s, i, f"budget={budget}")
+        print("sharded dispatch budget OK")
+    """)
+
+
+def test_sharded_service_flushes():
+    """HQIService runs flushes sharded when the index carries a mesh — same
+    answers as the single-device service, live inserts/deletes included
+    (delta rows stay exact f32 host-side, folded in the final merge)."""
+    run("""
+        from repro.service import HQIService, ServiceConfig
+
+        db = small_db(n=1200, seed=9)
+        wl = small_workload(db, n_queries=24)
+
+        def stream(svc):
+            handles = [svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+                       for i in range(wl.m)]
+            svc.drain()
+            return (np.stack([h.ids for h in handles]),
+                    np.stack([h.scores for h in handles]))
+
+        def build(mesh):
+            hqi = HQIIndex.build(db, wl, HQIConfig(
+                min_partition_size=128, max_leaves=16,
+                plan=PlanConfig(use_pallas=False)))
+            hqi.cfg.mesh = mesh
+            return HQIService(hqi, ServiceConfig(k=wl.k, nprobe=8, max_batch=16,
+                                                 deadline_s=0.0, batch_vec=True))
+        rng = np.random.default_rng(2)
+        newv = db.vectors[rng.integers(0, db.n, 8)] + 0.01 * rng.normal(
+            size=(8, db.d)).astype(np.float32)
+        dels = rng.integers(0, db.n, 20)  # ONE draw: both services mutate alike
+        outs = {}
+        for R in (None, 4):
+            svc = build(None if R is None else mesh_of(R))
+            ids0, sc0 = stream(svc)
+            svc.insert(newv)
+            svc.delete(dels)
+            ids1, sc1 = stream(svc)
+            svc.refresh()  # fold -> arena rebuild -> shard views refresh
+            ids2, sc2 = stream(svc)
+            outs[R] = (ids0, sc0, ids1, sc1, ids2, sc2)
+        for a, b in zip(outs[None], outs[4]):
+            assert np.array_equal(a, b)
+        print("sharded service flushes OK")
+    """)
+
+
+def test_sharded_property_parity():
+    """Hypothesis: random workloads / partition layouts / shard bounds ->
+    exact sharded-vs-single parity, and per-rank units partition the
+    single-device plan's unit multiset."""
+    pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
+    run("""
+        from hypothesis import given, settings, strategies as st
+        from repro.core import build_plan, build_plan_sharded
+        from repro.core.distributed import execute_sharded
+        from repro.core.plan import EngineTask
+        from repro.core.planner import execute_plan
+
+        @settings(max_examples=12, deadline=None)
+        @given(
+            seed=st.integers(0, 2**16),
+            n_parts=st.integers(1, 3),
+            R=st.sampled_from([1, 2, 3, 5, 8]),
+            nprobe=st.integers(1, 8),
+            with_bitmap=st.booleans(),
+            random_bounds=st.booleans(),
+        )
+        def prop(seed, n_parts, R, nprobe, with_bitmap, random_bounds):
+            rng = np.random.default_rng(seed)
+            d, m, k = 8, 11, 4
+            parts = []
+            for p in range(n_parts):
+                n_p = int(rng.integers(40, 400))
+                vecs = rng.normal(size=(n_p, d)).astype(np.float32)
+                ivf = IVFIndex.build(vecs, metric="ip",
+                                     n_centroids=int(rng.integers(2, 12)), seed=0)
+                rows = 10_000 * p + np.arange(n_p, dtype=np.int64)
+                parts.append((rows, ivf))
+            arena = PackedArena.from_partitions(parts)
+            q = rng.normal(size=(m, d)).astype(np.float32)
+            cfg = PlanConfig(tq_unit=4, min_list_pad=8, use_pallas=False)
+            tasks = []
+            for p, (rows, ivf) in enumerate(parts):
+                qrows = np.nonzero(rng.random(m) < 0.7)[0].astype(np.int64)
+                if len(qrows) == 0:
+                    continue
+                bm = (rng.random(ivf.n) < 0.6) if with_bitmap else None
+                tasks.append(EngineTask(
+                    part=p, qrows=qrows, nprobe=int(min(nprobe, ivf.n_lists)),
+                    packed_bitmap=None if bm is None else arena.packed_bitmap(p, bm)))
+            single = build_plan(arena, tasks, q, m=m, k=k, cfg=cfg)
+            ss, si = execute_plan(single, arena, q, cfg=cfg)
+            bounds = None
+            if random_bounds:
+                G = arena.n_lists
+                cuts = np.sort(rng.integers(0, G + 1, size=R - 1))
+                bounds = np.concatenate([[0], cuts, [G]])
+            sharded = arena.shard(R, bounds=bounds)
+            splan = build_plan_sharded(sharded, tasks, q, m=m, k=k, cfg=cfg)
+            assert splan.per_rank_units.sum() == single.n_units
+            bs, bi, stt = execute_sharded(
+                sharded, tasks, q, mesh=mesh_of(R), m=m, k=k, cfg=cfg)
+            assert np.array_equal(ss, bs) and np.array_equal(si, bi), seed
+            assert stt.per_rank_units.sum() == single.n_units
+
+        prop()
+        print("property parity OK")
+    """)

@@ -212,6 +212,51 @@ def test_telemetry_records_flushes(db, workload):
     assert s["merge_dispatches_per_flush"] >= 1
 
 
+def test_submit_completes_while_flush_in_flight(db, workload):
+    """Lock-free flush regression: the kernel pipeline runs OUTSIDE the state
+    lock, so submit()/insert()/delete() during a slow flush queue into the
+    next micro-batch instead of blocking for the flush duration."""
+    svc = _service(db, workload, max_batch=4)
+    started, release = threading.Event(), threading.Event()
+    orig_search = svc.index.search
+
+    def slow_search(*args, **kwargs):
+        started.set()
+        assert release.wait(timeout=30), "test harness never released the flush"
+        return orig_search(*args, **kwargs)
+
+    svc.index.search = slow_search
+    for i in range(3):
+        svc.submit(workload.vectors[i], workload.templates[workload.template_of[i]])
+    flusher = threading.Thread(target=svc.flush)
+    flusher.start()
+    assert started.wait(timeout=30), "flush never reached the engine"
+
+    # the flush is mid-pipeline; with the old lock-holding _flush these
+    # writes would block until release fires (and this wait would time out)
+    wrote = threading.Event()
+    state = {}
+
+    def writer():
+        state["h"] = svc.submit(
+            workload.vectors[3], workload.templates[workload.template_of[3]]
+        )
+        state["ins"] = svc.insert(np.zeros((2, db.d), dtype=np.float32))
+        state["del"] = svc.delete([0])
+        wrote.set()
+
+    w = threading.Thread(target=writer)
+    w.start()
+    assert wrote.wait(timeout=10), "writers blocked behind the in-flight flush"
+    w.join()
+    release.set()
+    flusher.join()
+
+    svc.drain()  # the mid-flight submit answers on the next micro-batch
+    assert state["h"].done
+    assert state["del"] == 1 and len(state["ins"]) == 2
+
+
 def test_threaded_service_and_dispatch_stats_thread_safety(db, workload):
     """Background scheduler thread + concurrent submitters; the process-wide
     DispatchStats counter must not lose increments under the race the lock
