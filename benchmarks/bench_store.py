@@ -1,0 +1,133 @@
+"""Persistence & recovery: snapshot load vs. rebuild, WAL replay, parity.
+
+The operational numbers behind the store subsystem (repro.store) on the
+KG-style workload:
+
+  * store/build            — full ``HQIIndex.build`` from raw tuples (the
+                             only restart path before the store existed)
+  * store/save             — one snapshot generation (manifest + .npy blobs)
+  * store/load             — mmap'd snapshot load (zero-copy; metadata-bound)
+  * store/load_speedup     — build / load (derived; target: ≥ 10×)
+  * store/loaded_parity    — fraction of queries the loaded index answers
+                             bit-identically to the in-memory original
+                             (derived; must be 1.000)
+  * store/wal_append       — per committed insert record (fsync'd)
+  * store/wal_replay       — recovery replay throughput (derived: rows/s)
+  * store/recovery_parity  — crash simulation (torn WAL tail): fraction of
+                             queries a recovered service answers identically
+                             to the uncrashed process (derived; must be 1.000)
+
+"derived" holds the paper-comparable figure for each row.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import HQIConfig, HQIIndex
+from repro.core.workload import kg_style
+from repro.service import ServiceConfig
+from repro.store import init_store, load_snapshot, open_service, save_snapshot
+from repro.store.wal import _HEADER, _MAGIC
+
+from .common import FAST, N, D, Q, emit, timed
+
+
+def main() -> None:
+    n = min(N, 20_000 if FAST else 100_000)
+    kg = kg_style(n=n, d=D, queries_per_split=Q, seed=0)
+    wl = kg.splits[0]
+    cfg = HQIConfig(min_partition_size=max(1024, n // 16), max_leaves=32)
+
+    # --- snapshot save/load vs. full rebuild --------------------------------
+    t0 = time.perf_counter()
+    hqi = HQIIndex.build(kg.db, wl, cfg)
+    build_s = time.perf_counter() - t0
+    hqi.search(wl, nprobe=8)  # warm arena + bitmap cache (what a snapshot ships)
+    emit("store/build", build_s * 1e6, f"{build_s:.2f}s rebuild from raw tuples")
+
+    root = tempfile.mkdtemp(prefix="bench_store_")
+    try:
+        save_s = timed(lambda: save_snapshot(root, hqi), warmup=0, iters=1)
+        emit("store/save", save_s * 1e6, "one generation (manifest + npy)")
+
+        load_s = timed(lambda: load_snapshot(root), warmup=1, iters=3)
+        speedup = build_s / load_s
+        emit("store/load", load_s * 1e6, "mmap load (zero-copy)")
+        emit("store/load_speedup", load_s * 1e6, f"{speedup:.1f}x vs rebuild")
+
+        loaded = load_snapshot(root).index
+        r0 = hqi.search(wl, nprobe=8)
+        r1 = loaded.search(wl, nprobe=8)
+        same = np.all(r0.ids == r1.ids, axis=1) & np.all(
+            r0.scores == r1.scores, axis=1
+        )
+        emit("store/loaded_parity", 0.0, f"parity_exact {same.mean():.3f}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+    # --- WAL append / replay rate ------------------------------------------
+    n_rec = 50 if FAST else 200
+    batch = 16
+    rng = np.random.default_rng(1)
+    new_rows = rng.normal(size=(n_rec * batch, D)).astype(np.float32)
+    root = tempfile.mkdtemp(prefix="bench_store_")
+    try:
+        svc = init_store(
+            root, hqi, cfg=ServiceConfig(k=wl.k, nprobe=8, delta_pq_threshold=None)
+        )
+        t0 = time.perf_counter()
+        for r in range(n_rec):
+            svc.insert(new_rows[r * batch : (r + 1) * batch])
+        append_s = (time.perf_counter() - t0) / n_rec
+        emit("store/wal_append", append_s * 1e6, f"batch={batch}, fsync per commit")
+
+        t0 = time.perf_counter()
+        svc2 = open_service(root, cfg=svc.cfg)
+        replay_s = time.perf_counter() - t0
+        rate = (n_rec * batch) / replay_s
+        assert svc2.n_live == svc.n_live
+        emit("store/wal_replay", replay_s * 1e6, f"{rate:.0f} rows/s replayed")
+
+        # --- crash recovery parity (torn tail dropped, acks identical) ------
+        svc.delete(np.arange(0, 50, 7))
+        svc.wal.close()
+        seg = os.path.join(root, "wal", svc.wal.segments()[-1])
+        with open(seg, "ab") as f:
+            f.write(_HEADER.pack(_MAGIC, 10**6, 1, 400, 0) + b"z" * 11)  # torn
+        t0 = time.perf_counter()
+        svc3 = open_service(root, cfg=svc.cfg)
+        recover_s = time.perf_counter() - t0
+
+        sub = min(wl.m, 128 if FAST else 512)
+        handles_a = [
+            svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+            for i in range(sub)
+        ]
+        svc.drain()
+        handles_b = [
+            svc3.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+            for i in range(sub)
+        ]
+        svc3.drain()
+        same = np.array(
+            [
+                np.array_equal(a.ids, b.ids) and np.array_equal(a.scores, b.scores)
+                for a, b in zip(handles_a, handles_b)
+            ]
+        )
+        emit(
+            "store/recovery_parity",
+            recover_s * 1e6,
+            f"parity_exact {same.mean():.3f} after simulated crash",
+        )
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ pq-vs-f32 bytes/recall, serving throughput) is tracked across PRs.
 import os
 import sys
 
-SMOKE_SUITES = ["engine", "kernels", "service", "distributed"]
+SMOKE_SUITES = ["engine", "kernels", "service", "distributed", "store"]
 
 
 def main() -> None:
@@ -25,7 +25,8 @@ def main() -> None:
 
     from . import (
         bench_distributed, bench_engine, bench_fig4_5, bench_fig6, bench_fig7,
-        bench_kernels, bench_service, bench_table3_4, bench_table5, common,
+        bench_kernels, bench_service, bench_store, bench_table3_4, bench_table5,
+        common,
     )
 
     suites = {
@@ -38,6 +39,7 @@ def main() -> None:
         "engine": bench_engine.main,
         "service": bench_service.main,
         "distributed": bench_distributed.main,
+        "store": bench_store.main,
     }
     picks = args or list(suites)
     print("name,us_per_call,derived")

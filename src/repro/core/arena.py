@@ -114,8 +114,56 @@ class PackedArena:
         """
         if self.pq is pq and self.codes is not None:
             return
+        if pq.d != self.d:
+            raise ValueError(
+                f"PQ codebook shape mismatch: codebook encodes d={pq.d} "
+                f"(m={pq.m} subspaces × dsub={pq.dsub}), arena rows have "
+                f"d={self.d}"
+            )
         self.pq = pq
         self.codes = encode_pq(pq, self.packed)
+
+    # ------------------------------------------------------------ persistence
+
+    def to_state(self) -> dict:
+        """Snapshot state (store/snapshot.py): arrays stay np.ndarray leaves.
+
+        The arena is derivable from the partitions, but persisting it makes a
+        loaded index *warm* — the first engine-backed search after a load
+        skips the O(N·d) concatenation (and the O(N·M) re-encode in pq mode)
+        and serves straight off the mmap'd blobs.
+        """
+        state = {
+            "metric": self.metric,
+            "packed": self.packed,
+            "gid": self.gid,
+            "local_of": self.local_of,
+            "list_start": self.list_start,
+            "list_len": self.list_len,
+            "list_base": self.list_base,
+            "part_row": self.part_row,
+            "centroids": {str(p): c for p, c in enumerate(self.centroids)},
+            "pq": None if self.pq is None else self.pq.to_state(),
+            "codes": self.codes,
+        }
+        return state
+
+    @staticmethod
+    def from_state(state: dict) -> "PackedArena":
+        cents = state["centroids"]
+        return PackedArena(
+            packed=np.asarray(state["packed"]),
+            gid=np.asarray(state["gid"]),
+            local_of=np.asarray(state["local_of"]),
+            list_start=np.asarray(state["list_start"]),
+            list_len=np.asarray(state["list_len"]),
+            list_base=np.asarray(state["list_base"]),
+            part_row=np.asarray(state["part_row"]),
+            centroids=[np.asarray(cents[str(p)]) for p in range(len(cents))],
+            metric=state["metric"],
+            pq=None if state["pq"] is None else PQCodebook.from_state(state["pq"]),
+            codes=None if state["codes"] is None else np.asarray(state["codes"]),
+        )
 
     # ------------------------------------------------------------------ shard
 

@@ -50,7 +50,7 @@ from .ivf import IVFIndex, ScanStats
 from .plan import EngineTask, PlanConfig, build_plan
 from .planner import ExtraCandidates, execute_plan
 from .pq import PQCodebook, train_pq
-from .predicates import evaluate_filter
+from .predicates import evaluate_filter, filter_from_state, filter_to_state
 from .qdtree import QDTree, build_qdtree
 from .types import SearchResult, VectorDatabase, Workload
 
@@ -89,6 +89,24 @@ class HQIConfig:
             self.plan = dataclasses.replace(
                 self.plan, refine_factor=int(self.refine_factor)
             )
+
+    def to_state(self) -> dict:
+        """Snapshot state (store/snapshot.py). ``mesh``/``shard_spec`` are
+        runtime wiring (device handles), not index state — a loaded index
+        re-attaches them explicitly."""
+        state = {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if f.name not in ("plan", "mesh", "shard_spec")
+        }
+        state["plan"] = dataclasses.asdict(self.plan)
+        return state
+
+    @staticmethod
+    def from_state(state: dict) -> "HQIConfig":
+        kw = dict(state)
+        kw["plan"] = PlanConfig(**kw["plan"])
+        return HQIConfig(**kw)
 
 
 @dataclasses.dataclass
@@ -461,6 +479,64 @@ class HQIIndex:
             )
         self._sharded = None  # shard views alias the replaced arena
         return new_rows
+
+    # ------------------------------------------------------------ persistence
+
+    def to_state(self) -> dict:
+        """Snapshot state (store/snapshot.py): everything a warm restart
+        needs — DB columns, qd-tree, per-partition IVFs, coarse centroids,
+        PQ codebook, the materialized arena (rows + posting-list table +
+        uint8 codes), and the Router's template bitmap cache — so a loaded
+        index answers bit-identically to this one with no recompute.
+        """
+        cached = list(self.router._bitmap_cache.items())
+        return {
+            "cfg": self.cfg.to_state(),
+            "db": self.db.to_state(),
+            "tree": self.tree.to_state(),
+            "partitions": [
+                {"rows": p.rows, "ivf": p.ivf.to_state()} for p in self.partitions
+            ],
+            "coarse_centroids": self.coarse_centroids,
+            "pq": None if self.pq is None else self.pq.to_state(),
+            "build_info": dataclasses.asdict(self.build_info),
+            # materialize so the snapshot serves engine searches immediately
+            # after load (no O(N·d) concatenation / O(N·M) re-encode)
+            "arena": self.arena.to_state(),
+            "router_cache": {
+                "filters": [filter_to_state(f) for f, _ in cached],
+                "bitmaps": (
+                    np.stack([bm for _, bm in cached])
+                    if cached
+                    else np.zeros((0, self.db.n), dtype=bool)
+                ),
+            },
+        }
+
+    @staticmethod
+    def from_state(state: dict) -> "HQIIndex":
+        index = HQIIndex(
+            db=VectorDatabase.from_state(state["db"]),
+            tree=QDTree.from_state(state["tree"]),
+            partitions=[
+                Partition(rows=np.asarray(ps["rows"]), ivf=IVFIndex.from_state(ps["ivf"]))
+                for ps in state["partitions"]
+            ],
+            cfg=HQIConfig.from_state(state["cfg"]),
+            coarse_centroids=(
+                None
+                if state["coarse_centroids"] is None
+                else np.asarray(state["coarse_centroids"])
+            ),
+            build_info=BuildInfo(**state["build_info"]),
+            pq=None if state["pq"] is None else PQCodebook.from_state(state["pq"]),
+        )
+        index._arena = PackedArena.from_state(state["arena"])
+        cache = state["router_cache"]
+        bitmaps = np.asarray(cache["bitmaps"])
+        for fi, fs in enumerate(cache["filters"]):
+            index.router._bitmap_cache[filter_from_state(fs)] = bitmaps[fi]
+        return index
 
     # ------------------------------------------------------------------ stats
 

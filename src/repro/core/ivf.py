@@ -94,6 +94,26 @@ class IVFIndex:
             metric=metric,
         )
 
+    def to_state(self) -> dict:
+        """Snapshot state (store/snapshot.py): arrays stay np.ndarray leaves."""
+        return {
+            "metric": self.metric,
+            "centroids": self.centroids,
+            "packed": self.packed,
+            "order": self.order,
+            "offsets": self.offsets,
+        }
+
+    @staticmethod
+    def from_state(state: dict) -> "IVFIndex":
+        return IVFIndex(
+            centroids=np.asarray(state["centroids"]),
+            packed=np.asarray(state["packed"]),
+            order=np.asarray(state["order"]),
+            offsets=np.asarray(state["offsets"]),
+            metric=state["metric"],
+        )
+
     def extend(self, vectors: np.ndarray) -> "IVFIndex":
         """New index with ``vectors`` appended to the existing posting lists.
 

@@ -37,6 +37,21 @@ class PQCodebook:
     def dsub(self) -> int:
         return int(self.centroids.shape[2])
 
+    @property
+    def d(self) -> int:
+        """Vector dimensionality this codebook encodes (m · dsub)."""
+        return self.m * self.dsub
+
+    def to_state(self) -> dict:
+        """Snapshot state (store/snapshot.py): arrays stay np.ndarray leaves."""
+        return {"metric": self.metric, "centroids": self.centroids}
+
+    @staticmethod
+    def from_state(state: dict) -> "PQCodebook":
+        return PQCodebook(
+            centroids=np.asarray(state["centroids"]), metric=state["metric"]
+        )
+
 
 def train_pq(
     vectors: np.ndarray,
@@ -65,6 +80,11 @@ def train_pq(
 def encode_pq(cb: PQCodebook, vectors: np.ndarray) -> np.ndarray:
     """uint8 codes [n, M]."""
     n, d = vectors.shape
+    if d != cb.d:
+        raise ValueError(
+            f"PQ codebook shape mismatch: codebook encodes d={cb.d} "
+            f"(m={cb.m} subspaces × dsub={cb.dsub}), vectors have d={d}"
+        )
     dsub = cb.dsub
     codes = np.empty((n, cb.m), np.uint8)
     for j in range(cb.m):

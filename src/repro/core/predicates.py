@@ -215,6 +215,53 @@ def evaluate_filter(
     return out
 
 
+# ---------------------------------------------------------------------------
+# Persistence (store/snapshot.py): predicates as JSON-safe state dicts
+# ---------------------------------------------------------------------------
+
+def predicate_to_state(p: Predicate) -> dict:
+    """JSON-serializable description of one predicate (snapshot manifests)."""
+    if isinstance(p, Cmp):
+        return {"kind": "cmp", "attr": p.attr, "op": p.op, "value": float(p.value)}
+    if isinstance(p, Between):
+        return {"kind": "between", "attr": p.attr, "lo": float(p.lo), "hi": float(p.hi)}
+    if isinstance(p, In):
+        return {"kind": "in", "attr": p.attr, "values": sorted(int(v) for v in p.values)}
+    if isinstance(p, Contains):
+        return {"kind": "contains", "attr": p.attr, "value": int(p.value)}
+    if isinstance(p, NotNull):
+        return {"kind": "notnull", "attr": p.attr}
+    if isinstance(p, CentroidIn):
+        return {"kind": "centroid_in", "centroids": sorted(int(c) for c in p.centroids)}
+    raise TypeError(f"unserializable predicate type {type(p).__name__}")
+
+
+def predicate_from_state(state: dict) -> Predicate:
+    kind = state["kind"]
+    if kind == "cmp":
+        return Cmp(state["attr"], state["op"], float(state["value"]))
+    if kind == "between":
+        return Between(state["attr"], float(state["lo"]), float(state["hi"]))
+    if kind == "in":
+        return In(state["attr"], frozenset(int(v) for v in state["values"]))
+    if kind == "contains":
+        return Contains(state["attr"], int(state["value"]))
+    if kind == "notnull":
+        return NotNull(state["attr"])
+    if kind == "centroid_in":
+        return CentroidIn(frozenset(int(c) for c in state["centroids"]))
+    raise ValueError(f"unknown predicate kind {kind!r}")
+
+
+def filter_to_state(filt: Tuple[Predicate, ...]) -> list:
+    """A conjunctive filter as a JSON-safe list (order preserved)."""
+    return [predicate_to_state(p) for p in filt]
+
+
+def filter_from_state(state: list) -> Tuple[Predicate, ...]:
+    return tuple(predicate_from_state(s) for s in state)
+
+
 def filter_implies_empty(
     filter: Tuple[Predicate, ...],
     known_all_false: Tuple[Predicate, ...] | set,

@@ -33,7 +33,12 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from .predicates import CentroidIn, Predicate
+from .predicates import (
+    CentroidIn,
+    Predicate,
+    predicate_from_state,
+    predicate_to_state,
+)
 from .types import VectorDatabase, Workload
 
 
@@ -57,6 +62,49 @@ class QDTree:
     @property
     def n_leaves(self) -> int:
         return len(self.leaves)
+
+    # -- persistence -------------------------------------------------------
+
+    def to_state(self) -> dict:
+        """Snapshot state (store/snapshot.py): the full tree structure —
+        cut predicates, implication/disjointness tables, and every leaf's
+        row set + semantic description — so routing after a load is
+        bit-identical to the tree that was saved (no re-mining)."""
+        return {
+            "n_centroids": int(self.n_centroids),
+            "preds": [predicate_to_state(p) for p in self.preds],
+            "imp": self.imp,
+            "disj": self.disj,
+            "leaves": [
+                {
+                    "leaf_id": int(leaf.leaf_id),
+                    "rows": leaf.rows,
+                    "all_false": [int(c) for c in leaf.all_false],
+                    "all_true_or": [[int(s) for s in S] for S in leaf.all_true_or],
+                    "depth": int(leaf.depth),
+                }
+                for leaf in self.leaves
+            ],
+        }
+
+    @staticmethod
+    def from_state(state: dict) -> "QDTree":
+        return QDTree(
+            preds=[predicate_from_state(s) for s in state["preds"]],
+            leaves=[
+                Leaf(
+                    leaf_id=int(ls["leaf_id"]),
+                    rows=np.asarray(ls["rows"]),
+                    all_false=[int(c) for c in ls["all_false"]],
+                    all_true_or=[tuple(int(s) for s in S) for S in ls["all_true_or"]],
+                    depth=int(ls["depth"]),
+                )
+                for ls in state["leaves"]
+            ],
+            imp=np.asarray(state["imp"]),
+            disj=np.asarray(state["disj"]),
+            n_centroids=int(state["n_centroids"]),
+        )
 
     # -- routing -----------------------------------------------------------
 

@@ -79,6 +79,24 @@ class Column:
         values = np.concatenate([a.values, b.values], axis=0)
         return Column(a.name, a.kind, values, np.concatenate([a.null_mask, b.null_mask]))
 
+    def to_state(self) -> dict:
+        """Snapshot state (store/snapshot.py): arrays stay np.ndarray leaves."""
+        return {
+            "name": self.name,
+            "kind": self.kind,
+            "values": self.values,
+            "null_mask": self.null_mask,
+        }
+
+    @staticmethod
+    def from_state(state: dict) -> "Column":
+        return Column(
+            name=state["name"],
+            kind=state["kind"],
+            values=np.asarray(state["values"]),
+            null_mask=np.asarray(state["null_mask"]),
+        )
+
     @staticmethod
     def all_null(like: "Column", n: int) -> "Column":
         """n rows of NULL with ``like``'s schema (inserts omitting a column)."""
@@ -131,6 +149,26 @@ class VectorDatabase:
             columns={k: c.take(idx) for k, c in self.columns.items()},
             metric=self.metric,
             ids=self.ids[idx],
+        )
+
+    def to_state(self) -> dict:
+        """Snapshot state (store/snapshot.py): arrays stay np.ndarray leaves."""
+        return {
+            "metric": self.metric,
+            "vectors": self.vectors,
+            "ids": self.ids,
+            "columns": {name: c.to_state() for name, c in self.columns.items()},
+        }
+
+    @staticmethod
+    def from_state(state: dict) -> "VectorDatabase":
+        return VectorDatabase(
+            vectors=np.asarray(state["vectors"]),
+            columns={
+                name: Column.from_state(cs) for name, cs in state["columns"].items()
+            },
+            metric=state["metric"],
+            ids=np.asarray(state["ids"]),
         )
 
     @staticmethod

@@ -24,6 +24,16 @@ Brute force over the buffer is the right trade: the buffer stays small
 between refreshes (it is the write working set), so one fused scan costs less
 than maintaining a second index, and the scan shares the engine's padded
 power-of-two shapes so it reuses compiled kernels across flushes.
+
+Compressed delta scans: when the store carries the index's ``PQCodebook``
+(the serving layer passes ``HQIIndex.pq``) and the live buffer has outgrown
+``ServiceConfig.delta_pq_threshold``, the flush scan switches to the same
+two-stage path the engine uses — rows are PQ-encoded once at insert time,
+the scan reads uint8 codes through ``kernels.ops.workunit_pq_topk`` (ADC),
+and the ``refine_factor · k`` survivors are re-scored exactly from the f32
+rows in one ``workunit_topk`` dispatch. Large write bursts between refreshes
+stop paying d·4 bytes per scanned row; buffers under the threshold keep the
+exact f32 scan.
 """
 from __future__ import annotations
 
@@ -35,19 +45,32 @@ import numpy as np
 
 from ..core.ivf import ScanStats
 from ..core.plan import _next_pow2
+from ..core.pq import PQCodebook, adc_tables, encode_pq
 from ..core.predicates import evaluate_filter
 from ..core.types import CATEGORICAL, Column, NUMERIC, SETCAT, VectorDatabase, Workload
 from ..kernels import ops as kops
 
 
 class DeltaStore:
-    """Append buffer + tombstones over a base schema; ids start at first_id."""
+    """Append buffer + tombstones over a base schema; ids start at first_id.
 
-    def __init__(self, schema_db: VectorDatabase, first_id: int) -> None:
+    With ``pq`` set (the index codebook), inserted rows are additionally
+    PQ-encoded on arrival — incremental, one ``encode_pq`` per insert batch —
+    so a compressed flush scan never re-encodes the whole buffer.
+    """
+
+    def __init__(
+        self,
+        schema_db: VectorDatabase,
+        first_id: int,
+        pq: Optional[PQCodebook] = None,
+    ) -> None:
         self._schema = schema_db  # schema donor only; rows never touched
         self.first_id = int(first_id)
+        self.pq = pq
         self._db: Optional[VectorDatabase] = None
         self._dead = np.zeros(0, dtype=bool)
+        self._codes: Optional[np.ndarray] = None  # uint8 [n, M], iff pq
 
     @property
     def n(self) -> int:
@@ -87,13 +110,19 @@ class DeltaStore:
             assert out[name].n == n, f"column {name}: {out[name].n} rows, expected {n}"
         return out
 
-    def insert(
+    def prepare_insert(
         self,
         vectors: np.ndarray,
         columns: Optional[Dict[str, np.ndarray]] = None,
         null_masks: Optional[Dict[str, np.ndarray]] = None,
-    ) -> np.ndarray:
-        """Append rows; returns their global ids (visible to the next flush)."""
+    ) -> Tuple[VectorDatabase, np.ndarray]:
+        """Validate + stage an insert WITHOUT applying it: (slab, ids).
+
+        Split from ``insert`` for the WAL ordering in service.py: the commit
+        record must hit disk after validation (a rejected insert is never
+        logged) but before the buffer mutates (a failed append leaves no
+        unlogged rows behind). ``commit_insert`` is infallible.
+        """
         vectors = np.atleast_2d(np.asarray(vectors, dtype=np.float32))
         assert vectors.shape[1] == self._schema.d, "vector dimension mismatch"
         n = vectors.shape[0]
@@ -104,9 +133,31 @@ class DeltaStore:
             metric=self._schema.metric,
             ids=ids,
         )
+        return slab, ids
+
+    def commit_insert(self, slab: VectorDatabase, ids: np.ndarray) -> np.ndarray:
+        """Apply a prepared insert (no validation — see ``prepare_insert``)."""
+        n = slab.n
         self._db = slab if self._db is None else VectorDatabase.concat(self._db, slab)
         self._dead = np.concatenate([self._dead, np.zeros(n, dtype=bool)])
+        if self.pq is not None:
+            new_codes = encode_pq(self.pq, slab.vectors)
+            self._codes = (
+                new_codes
+                if self._codes is None
+                else np.concatenate([self._codes, new_codes], axis=0)
+            )
         return ids
+
+    def insert(
+        self,
+        vectors: np.ndarray,
+        columns: Optional[Dict[str, np.ndarray]] = None,
+        null_masks: Optional[Dict[str, np.ndarray]] = None,
+    ) -> np.ndarray:
+        """Append rows; returns their global ids (visible to the next flush)."""
+        slab, ids = self.prepare_insert(vectors, columns, null_masks)
+        return self.commit_insert(slab, ids)
 
     def delete(self, ext_id: int) -> bool:
         """Tombstone a buffered row; False if the id is not in the buffer."""
@@ -130,6 +181,8 @@ class DeltaStore:
             db=self._db,
             live=~self._dead.copy(),
             first_id=self.first_id,
+            pq=self.pq,
+            codes=self._codes,
         )
 
     def scan(
@@ -137,15 +190,23 @@ class DeltaStore:
         workload: Workload,
         *,
         stats: Optional[ScanStats] = None,
+        pq_threshold: Optional[int] = None,
+        refine_factor: int = 4,
     ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
         """Brute-force top-k over live buffered rows, per query.
 
         Returns (scores f32 [m, k], global ids i64 [m, k]) best-first with
         (-inf, -1) padding, or None when no buffered row passes any filter —
         one ``workunit_topk`` dispatch, one work unit per flush template,
-        shapes padded to powers of two for compile reuse.
+        shapes padded to powers of two for compile reuse. (See
+        ``DeltaView.scan`` for the compressed path the knobs select.)
         """
-        return self.view().scan(workload, stats=stats)
+        return self.view().scan(
+            workload,
+            stats=stats,
+            pq_threshold=pq_threshold,
+            refine_factor=refine_factor,
+        )
     # --------------------------------------------------------------- refresh
 
     def snapshot(self) -> Tuple[Optional[VectorDatabase], np.ndarray]:
@@ -156,6 +217,7 @@ class DeltaStore:
         """Reset after a fold; subsequent inserts continue from ``first_id``."""
         self._db = None
         self._dead = np.zeros(0, dtype=bool)
+        self._codes = None
         self.first_id = int(first_id)
 
 
@@ -166,32 +228,69 @@ class DeltaView:
     db: Optional[VectorDatabase]
     live: np.ndarray  # bool — alive among the snapshot's buffered rows
     first_id: int
+    pq: Optional[PQCodebook] = None  # index codebook (compressed scans)
+    codes: Optional[np.ndarray] = None  # uint8 [n, M], row-aligned with db
 
     def scan(
         self,
         workload: Workload,
         *,
         stats: Optional[ScanStats] = None,
+        pq_threshold: Optional[int] = None,
+        refine_factor: int = 4,
     ) -> Optional[Tuple[np.ndarray, np.ndarray]]:
-        """Brute-force top-k over the snapshot's live rows, per query."""
+        """Top-k over the snapshot's live rows, per query.
+
+        Exact brute force by default. When the view carries the index
+        codebook and the live buffer exceeds ``pq_threshold``, the scan runs
+        compressed instead: one ADC dispatch over the uint8 codes keeping
+        ``refine_factor · k`` candidates per query, then one exact f32
+        re-rank dispatch of the survivors — M bytes scanned per row instead
+        of d·4. Buffers at or under the threshold stay exact.
+        """
         db = self.db
         if db is None or not self.live.any():
             return None
-        live = self.live
-        k, m, d = workload.k, workload.m, db.d
+        groups = self._groups(workload, stats)
+        if not groups:
+            return None
+        use_pq = (
+            self.pq is not None
+            and self.codes is not None
+            and pq_threshold is not None
+            and int(self.live.sum()) > int(pq_threshold)
+        )
+        if use_pq:
+            return self._scan_pq(workload, groups, refine_factor, stats)
+        return self._scan_f32(workload, groups, stats)
+
+    def _groups(
+        self, workload: Workload, stats: Optional[ScanStats]
+    ) -> list:
+        """Per-template (query rows, filtered live bitmap) scan groups."""
+        db = self.db
         groups = []  # (qidx, bitmap over buffered rows)
         for ti, filt in enumerate(workload.templates):
             qidx = workload.queries_for_template(ti)
             if len(qidx) == 0:
                 continue
-            bm = evaluate_filter(filt, db) & live
+            bm = evaluate_filter(filt, db) & self.live
             if stats is not None:
                 stats.tuples_scanned += db.n * len(qidx)
                 stats.dists_computed += int(bm.sum()) * len(qidx)
             if bm.any():
                 groups.append((qidx, bm))
-        if not groups:
-            return None
+        return groups
+
+    def _scan_f32(
+        self,
+        workload: Workload,
+        groups: list,
+        stats: Optional[ScanStats],
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """The exact path: one fused f32 work-unit dispatch per flush."""
+        db = self.db
+        k, m, d = workload.k, workload.m, db.d
         W = len(groups)
         TQ = _next_pow2(max(len(q) for q, _ in groups), 1)
         TV = _next_pow2(db.n, 8)
@@ -202,6 +301,8 @@ class DeltaView:
         for w, (qidx, bm) in enumerate(groups):
             Q[w, : len(qidx)] = workload.vectors[qidx]
             valid[w, : db.n] = bm
+        if stats is not None:
+            stats.bytes_scanned += W * db.n * d * 4
         kk = min(k, TV)
         s, iloc = kops.workunit_topk(
             jnp.asarray(Q), jnp.asarray(V), jnp.asarray(valid), kk, metric=db.metric
@@ -216,5 +317,78 @@ class DeltaView:
                 iloc[w, :nq] >= 0, self.first_id + iloc[w, :nq], -1
             )
             out_s[qidx, :kk] = s[w, :nq]
+        out_s = np.where(out_i < 0, -np.inf, out_s)
+        return out_s, out_i
+
+    def _scan_pq(
+        self,
+        workload: Workload,
+        groups: list,
+        refine_factor: int,
+        stats: Optional[ScanStats],
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Compressed path: ADC over uint8 codes, exact re-rank of survivors.
+
+        Mirrors the engine's two-stage ``scan_mode="pq"`` execution
+        (core/planner.py): stage A is one ``workunit_pq_topk`` dispatch over
+        the buffer's code rows (one work unit per flush template, LUTs built
+        once per flush), stage B gathers the surviving rows' f32 vectors and
+        re-scores them exactly in one per-query ``workunit_topk`` dispatch —
+        so returned scores are exact and directly mergeable with the
+        engine's (exact) results.
+        """
+        db = self.db
+        k, m, d = workload.k, workload.m, db.d
+        M = self.codes.shape[1]
+        W = len(groups)
+        TQ = _next_pow2(max(len(q) for q, _ in groups), 1)
+        TV = _next_pow2(db.n, 8)
+        kprime = min(max(k, int(refine_factor) * k), TV)
+
+        luts_all = adc_tables(self.pq, workload.vectors)  # [m, M, 256]
+        luts = np.zeros((W, TQ, M, luts_all.shape[2]), dtype=np.float32)
+        codes = np.zeros((W, TV, M), dtype=np.uint8)
+        valid = np.zeros((W, TV), dtype=bool)
+        codes[:, : db.n] = self.codes
+        for w, (qidx, bm) in enumerate(groups):
+            luts[w, : len(qidx)] = luts_all[qidx]
+            valid[w, : db.n] = bm
+        if stats is not None:
+            stats.bytes_scanned += W * db.n * M
+        _, iloc = kops.workunit_pq_topk(
+            jnp.asarray(luts), jnp.asarray(codes), jnp.asarray(valid), kprime
+        )
+        iloc = np.asarray(iloc).astype(np.int64)  # [W, TQ, kprime] buffer rows
+
+        # per-query survivor rows (each query scans exactly one group)
+        rows = np.full((m, kprime), -1, dtype=np.int64)
+        for w, (qidx, _) in enumerate(groups):
+            rows[qidx] = iloc[w, : len(qidx)]
+
+        # exact re-rank: one per-query-unit dispatch over the survivors
+        mp = _next_pow2(m, 1)
+        Qr = np.zeros((mp, 1, d), dtype=np.float32)
+        Qr[:m, 0] = workload.vectors
+        Vr = np.zeros((mp, kprime, d), dtype=np.float32)
+        Vr[:m] = db.vectors[np.maximum(rows, 0)]
+        valid_r = np.zeros((mp, kprime), dtype=bool)
+        valid_r[:m] = rows >= 0
+        if stats is not None:
+            stats.bytes_scanned += int((rows >= 0).sum()) * d * 4
+        kk = min(k, kprime)
+        s, i_loc = kops.workunit_topk(
+            jnp.asarray(Qr),
+            jnp.asarray(Vr),
+            jnp.asarray(valid_r),
+            kk,
+            metric=db.metric,
+        )
+        s = np.asarray(s)[:m, 0]  # [m, kk] exact scores
+        i_loc = np.asarray(i_loc)[:m, 0].astype(np.int64)  # idx into survivors
+        picked = np.take_along_axis(rows, np.maximum(i_loc, 0), axis=1)
+        out_i = np.full((m, k), -1, np.int64)
+        out_s = np.full((m, k), -np.inf, np.float32)
+        out_i[:, :kk] = np.where(i_loc >= 0, self.first_id + picked, -1)
+        out_s[:, :kk] = np.where(i_loc >= 0, s, -np.inf)
         out_s = np.where(out_i < 0, -np.inf, out_s)
         return out_s, out_i

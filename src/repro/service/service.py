@@ -30,6 +30,13 @@ during a slow flush queue into the next micro-batch instead of blocking
 (tests/test_service.py has the threaded regression). When the index was
 built with ``HQIConfig.mesh`` set, every flush's engine work runs on the
 device mesh through the sharded executor, transparently.
+
+Durability (repro.store): with a ``WriteAheadLog`` attached (``wal=``, wired
+by ``store.recovery.open_service``/``init_store``), every ``insert``/
+``delete`` commits a WAL record *before* acknowledging, ``refresh()`` seals
+the current WAL segment at the fold boundary, and ``store.compact.Compactor``
+periodically folds + snapshots so restart cost stays O(mmap + WAL tail).
+Without a WAL the service is purely in-memory, exactly as before.
 """
 from __future__ import annotations
 
@@ -63,6 +70,12 @@ class ServiceConfig:
     deadline_s: float = 0.005  # latency flush trigger (oldest query's wait)
     queue_bound: int = 8192  # admission control: max pending queries
     pad_pow2: bool = False  # pad flushes to power-of-two batch slots (TPU)
+    # delta-store compression: once the live delta buffer exceeds this many
+    # rows (and the index has a PQ codebook), flush scans encode the delta
+    # through the ADC path with exact f32 re-rank of the survivors instead
+    # of brute-forcing f32 rows; None disables. Buffers at or under the
+    # threshold always scan exact.
+    delta_pq_threshold: Optional[int] = 4096
 
 
 @dataclasses.dataclass
@@ -105,15 +118,32 @@ class QueryHandle:
 class HQIService:
     """Streaming HVQ service: micro-batched reads, immediately-visible writes."""
 
-    def __init__(self, index: HQIIndex, cfg: Optional[ServiceConfig] = None) -> None:
+    def __init__(
+        self,
+        index: HQIIndex,
+        cfg: Optional[ServiceConfig] = None,
+        wal=None,  # store.wal.WriteAheadLog; None = in-memory only
+    ) -> None:
         self.index = index
         self.cfg = ServiceConfig() if cfg is None else cfg
+        self.wal = wal
+        # last WAL record whose effects live in (index, _live) rather than
+        # the delta buffer — what a snapshot of this service covers
+        # (store.compact reads it; store.recovery seeds it after a replay)
+        self._wal_folded_seq = 0 if wal is None else wal.last_seq
         self.scheduler = MicroBatchScheduler(
             max_batch=self.cfg.max_batch,
             deadline_s=self.cfg.deadline_s,
             pad_pow2=self.cfg.pad_pow2,
         )
-        self.delta = DeltaStore(index.db, first_id=index.db.n)
+        # hand the delta the codebook only when compressed delta scans can
+        # actually fire — otherwise inserts would pay encode_pq for codes
+        # the scan path never reads
+        self.delta = DeltaStore(
+            index.db,
+            first_id=index.db.n,
+            pq=index.pq if self.cfg.delta_pq_threshold is not None else None,
+        )
         self.telemetry = ServiceTelemetry()
         self._live = np.ones(index.db.n, dtype=bool)  # tombstones over indexed rows
         # state lock for scheduler + delta + live-mask: writers and the flush
@@ -155,22 +185,46 @@ class HQIService:
         columns: Optional[Dict[str, np.ndarray]] = None,
         null_masks: Optional[Dict[str, np.ndarray]] = None,
     ) -> np.ndarray:
-        """Add tuples to the live DB; visible to the next flush. Returns ids."""
+        """Add tuples to the live DB; visible to the next flush. Returns ids.
+
+        With a WAL attached the insert is committed durably BEFORE the ids
+        are returned — an acknowledged insert survives a crash (recovery
+        replays the WAL tail into a fresh delta store, same ids). Ordering:
+        validate → WAL append+fsync → apply, so a rejected insert is never
+        logged and a failed append never leaves unlogged rows visible.
+        """
         with self._lock:
-            return self.delta.insert(vectors, columns, null_masks)
+            slab, ids = self.delta.prepare_insert(vectors, columns, null_masks)
+            if self.wal is not None:
+                self.wal.log_insert(slab.vectors, ids, columns, null_masks)
+            self.delta.commit_insert(slab, ids)
+        return ids
 
     def delete(self, ids: Iterable[int]) -> int:
-        """Tombstone tuples by global id; visible to the next flush."""
-        n = 0
+        """Tombstone tuples by global id; visible to the next flush.
+
+        With a WAL attached the delete is committed durably BEFORE it is
+        acknowledged and before any tombstone is applied (same contract as
+        ``insert``; replay is idempotent).
+        """
         with self._lock:
-            for ext_id in np.atleast_1d(np.asarray(ids, dtype=np.int64)):
-                ext_id = int(ext_id)
-                if 0 <= ext_id < len(self._live):
-                    if self._live[ext_id]:
-                        self._live[ext_id] = False
-                        n += 1
-                elif self.delta.delete(ext_id):
+            ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+            if self.wal is not None:
+                self.wal.log_delete(ids)
+            n = self._delete_locked(ids)
+        return n
+
+    def _delete_locked(self, ids: Iterable[int]) -> int:
+        """Apply tombstones without WAL commit (shared with WAL replay)."""
+        n = 0
+        for ext_id in np.atleast_1d(np.asarray(ids, dtype=np.int64)):
+            ext_id = int(ext_id)
+            if 0 <= ext_id < len(self._live):
+                if self._live[ext_id]:
+                    self._live[ext_id] = False
                     n += 1
+            elif self.delta.delete(ext_id):
+                n += 1
         return n
 
     @property
@@ -200,15 +254,33 @@ class HQIService:
         Takes the flush lock first (same order as ``_flush``): the fold
         mutates index structures an in-flight flush would be reading outside
         the state lock.
+
+        With a WAL attached, a fold also seals the current WAL segment
+        (``rotate``) — folded records are covered by the next snapshot, so
+        compaction can prune whole sealed segments.
         """
-        with self._flush_lock, self._lock:
+        with self._flush_lock:
+            return self._refresh_locked()
+
+    def _refresh_locked(self) -> int:
+        """The fold body; caller holds the flush lock (see ``Compactor``)."""
+        with self._lock:
             delta_db, delta_live = self.delta.snapshot()
-            if delta_db is None:
-                return 0
-            self.index.extend(delta_db)
-            self._live = np.concatenate([self._live, delta_live])
-            self.delta.clear(first_id=self.index.db.n)
-            return delta_db.n
+            n = 0
+            if delta_db is not None:
+                self.index.extend(delta_db)
+                self._live = np.concatenate([self._live, delta_live])
+                self.delta.clear(first_id=self.index.db.n)
+                n = delta_db.n
+            if self.wal is not None:
+                # with the delta (now) empty, EVERY committed record's effect
+                # lives in (index, _live): inserts were just folded, deletes
+                # tombstoned _live at commit time — so a delete-only interval
+                # also advances the folded seq and seals its segment (or the
+                # WAL could never be pruned under delete-heavy traffic)
+                self._wal_folded_seq = self.wal.last_seq
+                self.wal.rotate()
+            return n
 
     # ---------------------------------------------------------- serving loop
 
@@ -297,7 +369,12 @@ class HQIService:
             batch_vec=self.cfg.batch_vec,
             live_mask=live,
         )
-        delta_out = delta_view.scan(wl, stats=ScanStats())
+        delta_out = delta_view.scan(
+            wl,
+            stats=ScanStats(),
+            pq_threshold=self.cfg.delta_pq_threshold,
+            refine_factor=self.index.cfg.plan.refine_factor,
+        )
         if delta_out is None:
             return res.ids, res.scores
         ds, di = delta_out

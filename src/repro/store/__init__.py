@@ -1,0 +1,30 @@
+"""Index persistence & recovery: versioned snapshots, serving WAL, compaction.
+
+Public API:
+    save_snapshot / load_snapshot / Snapshot — versioned manifest + .npy
+        generations of a full ``HQIIndex`` (+ live mask), mmap'd zero-copy
+        on load; build_state / write_generation split capture from blob I/O
+    list_generations / prune_generations — generation lifecycle
+    WriteAheadLog / WalRecord — append-only commit log for serving writes
+    init_store / open_service / replay_into — bootstrap + crash recovery
+    Compactor — background fold → snapshot → prune loop
+"""
+from .compact import Compactor  # noqa: F401
+from .recovery import (  # noqa: F401
+    RecoveryError,
+    init_store,
+    open_service,
+    replay_into,
+    wal_dir,
+)
+from .snapshot import (  # noqa: F401
+    Snapshot,
+    SnapshotError,
+    build_state,
+    list_generations,
+    load_snapshot,
+    prune_generations,
+    save_snapshot,
+    write_generation,
+)
+from .wal import KIND_DELETE, KIND_INSERT, WalRecord, WriteAheadLog  # noqa: F401

@@ -1,0 +1,146 @@
+"""Background compaction: fold the delta, snapshot a fresh generation, prune.
+
+Between refreshes the write working set lives in the DeltaStore and the WAL
+tail grows per commit; restart cost is snapshot-load + WAL-replay. The
+compactor bounds that tail: periodically (or when the delta outgrows
+``min_delta_rows``) it
+
+  1. folds the delta into the index partitions via the service's existing
+     incremental ``refresh()`` path (qd-tree leaf routing + IVF append +
+     ``PackedArena.updated`` — never a rebuild), which also seals the WAL
+     segment at the fold boundary;
+  2. captures (index state, live mask, folded WAL seq) under the flush lock
+     — a consistent point: refresh is excluded, and concurrent writes land
+     in the delta + WAL *after* the captured seq, so recovery replays them;
+  3. writes a new snapshot generation OUTSIDE the service locks (tmp-dir +
+     atomic rename + CURRENT swap, see snapshot.py) — flushes and writes
+     proceed while the blobs stream to disk;
+  4. prunes old generations (keeping ``keep_generations``) and deletes WAL
+     segments every remaining generation already covers.
+
+Snapshotting at fold points is also what keeps recovery *bit-identical*
+under approximate search: every row is either in the snapshot's partitions
+or in the replayed delta, exactly as in the uncrashed process.
+"""
+from __future__ import annotations
+
+import threading
+from typing import List, Optional
+
+from ..service.service import HQIService
+from .snapshot import (
+    build_state,
+    list_generations,
+    prune_generations,
+    write_generation,
+)
+from .wal import WriteAheadLog
+
+
+class Compactor:
+    """Folds + snapshots an ``HQIService`` store in the background.
+
+    Drive it synchronously (``compact_once``) or as a daemon thread
+    (``start``/``stop``). One compactor per store root; compaction never
+    blocks readers for longer than the in-memory fold (step 2 holds the
+    flush lock only to capture array *references* — blob writing happens
+    outside).
+    """
+
+    def __init__(
+        self,
+        service: HQIService,
+        root: str,
+        *,
+        interval_s: float = 30.0,
+        min_delta_rows: int = 1,
+        keep_generations: int = 2,
+    ) -> None:
+        assert service.wal is not None, "compaction needs a WAL-backed service"
+        self.service = service
+        self.root = root
+        self.interval_s = float(interval_s)
+        self.min_delta_rows = int(min_delta_rows)
+        self.keep_generations = int(keep_generations)
+        self.generations_written = 0
+        self.last_error: Optional[BaseException] = None  # background health
+        self._thread: Optional[threading.Thread] = None
+        self._stop_flag = threading.Event()
+
+    # ------------------------------------------------------------------ once
+
+    def compact_once(self, force: bool = False) -> Optional[str]:
+        """One fold → snapshot → prune cycle; returns the new generation name.
+
+        Returns None when the delta is below ``min_delta_rows`` (nothing
+        worth folding) and ``force`` is False.
+        """
+        svc = self.service
+        with svc._flush_lock:
+            with svc._lock:
+                pending = svc.delta.n
+            if pending < self.min_delta_rows and not force:
+                return None
+            svc._refresh_locked()  # folds + seals the WAL segment
+            with svc._lock:
+                # capture the state tree — array REFERENCES, no blob I/O.
+                # Index mutations are replacements (extend swaps arrays), so
+                # the captured refs stay immutable after the locks drop and
+                # the blobs can stream to disk without blocking the service.
+                state = build_state(svc.index, live=svc._live.copy())
+                wal_seq = svc._wal_folded_seq
+        name = write_generation(self.root, state, wal_seq=wal_seq)
+        self.generations_written += 1
+        self._prune(wal_seq)
+        return name
+
+    def _prune(self, newest_covered_seq: int) -> None:
+        prune_generations(self.root, keep=self.keep_generations)
+        # WAL segments are deletable once the OLDEST remaining generation
+        # covers them — an operator rolling back to it must still replay
+        # everything after its wal_seq. With keep_generations snapshots at
+        # monotone wal_seqs, that is the (keep-1)-back snapshot's seq; being
+        # conservative, prune only below the oldest remaining generation.
+        import json
+        import os
+
+        kept = list_generations(self.root)
+        seqs: List[int] = []
+        for g in kept:
+            try:
+                with open(os.path.join(self.root, g, "manifest.json")) as f:
+                    seqs.append(int(json.load(f)["wal_seq"]))
+            except (OSError, ValueError, KeyError):
+                seqs.append(0)
+        covered = min(seqs) if seqs else newest_covered_seq
+        wal: WriteAheadLog = self.service.wal
+        wal.prune(covered)
+
+    # ------------------------------------------------------------ background
+
+    def start(self) -> None:
+        """Run ``compact_once`` on a daemon thread every ``interval_s``."""
+        assert self._thread is None, "compactor already running"
+        self._stop_flag.clear()
+
+        def loop() -> None:
+            while not self._stop_flag.wait(self.interval_s):
+                try:
+                    self.compact_once()
+                    self.last_error = None
+                except Exception as e:  # keep compacting through transients
+                    # (disk full, etc.): the service must outlive its
+                    # compactor; operators poll ``last_error``
+                    self.last_error = e
+
+        self._thread = threading.Thread(target=loop, name="hqi-compactor", daemon=True)
+        self._thread.start()
+
+    def stop(self, final_compact: bool = True) -> None:
+        """Stop the thread; optionally snapshot whatever is pending first."""
+        if self._thread is not None:
+            self._stop_flag.set()
+            self._thread.join()
+            self._thread = None
+        if final_compact:
+            self.compact_once()

@@ -1,0 +1,340 @@
+"""Versioned on-disk snapshots of an ``HQIIndex`` (+ serving state).
+
+The index is exactly the state that is expensive to recompute — qd-tree
+partitions mined from the historical workload, per-partition IVF quantizers,
+the packed arena, trained PQ codebooks — yet before this module the repo
+could only rebuild it from raw tuples on every process start. A snapshot
+makes restart O(mmap) instead of O(k-means).
+
+Format (one *generation* per save, self-describing and versioned):
+
+    <root>/
+      CURRENT                  # text file: name of the newest valid generation
+      gen-000001/
+        manifest.json          # JSON tree mirroring HQIIndex.to_state(); every
+                               # array leaf replaced by an {"__npy__": ...}
+                               # record (file, dtype, shape, nbytes)
+        arrays/<dotted.path>.npy
+      wal/                     # owned by store/wal.py
+
+Array blobs are plain ``.npy`` files written with ``np.save`` and loaded with
+``np.load(mmap_mode="r")`` — zero-copy: the loaded index's packed rows, PQ
+codes, posting-list tables, and bitmap cache are memory-mapped pages shared
+with the OS cache, so load cost is metadata-only and independent of DB size.
+
+Crash safety: a generation is staged as ``gen-XXXXXX.tmp`` (arrays first,
+manifest LAST, both fsync'd), atomically renamed into place, and only then is
+``CURRENT`` swapped (tmp-write + rename). A crash at any point leaves either
+the old generation current or a ``.tmp`` directory the loader ignores and the
+next save sweeps. ``load_snapshot`` validates the manifest and every referenced
+blob (existence + byte size) and falls back to older generations when the
+newest is torn.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from ..core.hqi import HQIIndex
+from .wal import _fsync_dir
+
+FORMAT = "hqi-snapshot"
+VERSION = 1
+
+_GEN_PREFIX = "gen-"
+_ARRAY_KEY = "__npy__"
+
+
+# ---------------------------------------------------------------------------
+# State-tree <-> (manifest JSON, array blobs)
+# ---------------------------------------------------------------------------
+
+
+def _externalize(node: Any, arrays: Dict[str, np.ndarray], prefix: str) -> Any:
+    """Replace every ndarray leaf with a blob record; collect arrays by file.
+
+    Blob filenames are percent-quoted (user-supplied column names flow into
+    the key path — a ``/`` or other separator must not escape ``arrays/``).
+    """
+    if isinstance(node, np.ndarray):
+        from urllib.parse import quote
+
+        key = prefix.strip(".") or "root"
+        fname = quote(key, safe="") + ".npy"
+        assert fname not in arrays, f"duplicate array key {key}"
+        arrays[fname] = node
+        return {
+            _ARRAY_KEY: fname,
+            "dtype": str(node.dtype),
+            "shape": list(node.shape),
+        }
+    if isinstance(node, dict):
+        return {
+            str(k): _externalize(v, arrays, f"{prefix}.{k}") for k, v in node.items()
+        }
+    if isinstance(node, (list, tuple)):
+        return [_externalize(v, arrays, f"{prefix}.{i}") for i, v in enumerate(node)]
+    if isinstance(node, (np.integer,)):
+        return int(node)
+    if isinstance(node, (np.floating,)):
+        return float(node)
+    if isinstance(node, (np.bool_,)):
+        return bool(node)
+    assert node is None or isinstance(node, (bool, int, float, str)), (
+        f"unserializable snapshot leaf at {prefix!r}: {type(node).__name__}"
+    )
+    return node
+
+
+def _internalize(node: Any, arrays_dir: str, *, mmap: bool = True) -> Any:
+    """Inverse of ``_externalize``: blob records become (mmap'd) ndarrays."""
+    if isinstance(node, dict):
+        if _ARRAY_KEY in node:
+            fname = node[_ARRAY_KEY]
+            if os.path.basename(fname) != fname or fname.startswith(".."):
+                raise SnapshotError(f"unsafe blob path {fname!r} in manifest")
+            path = os.path.join(arrays_dir, fname)
+            arr = np.load(path, mmap_mode="r" if mmap else None)
+            if tuple(arr.shape) != tuple(node["shape"]) or str(arr.dtype) != node["dtype"]:
+                raise SnapshotError(
+                    f"blob {node[_ARRAY_KEY]} does not match its manifest record: "
+                    f"{arr.dtype}{list(arr.shape)} vs {node['dtype']}{node['shape']}"
+                )
+            return arr
+        return {k: _internalize(v, arrays_dir, mmap=mmap) for k, v in node.items()}
+    if isinstance(node, list):
+        return [_internalize(v, arrays_dir, mmap=mmap) for v in node]
+    return node
+
+
+class SnapshotError(RuntimeError):
+    """No loadable generation (missing, torn, or version-incompatible)."""
+
+
+# ---------------------------------------------------------------------------
+# Generations
+# ---------------------------------------------------------------------------
+
+
+def _gen_name(gen: int) -> str:
+    return f"{_GEN_PREFIX}{gen:06d}"
+
+
+def _gen_number(name: str) -> int:
+    return int(name[len(_GEN_PREFIX):])
+
+
+def list_generations(root: str) -> List[str]:
+    """Completed generation names under ``root``, oldest first."""
+    if not os.path.isdir(root):
+        return []
+    out = [
+        e
+        for e in os.listdir(root)
+        if e.startswith(_GEN_PREFIX)
+        and not e.endswith(".tmp")
+        and os.path.isdir(os.path.join(root, e))
+    ]
+    return sorted(out, key=_gen_number)
+
+
+def _atomic_write(path: str, data: str) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path))
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """A loaded generation: the index plus its serving-layer sidecar state."""
+
+    index: HQIIndex
+    live: Optional[np.ndarray]  # bool [db.n] tombstone mask (None = all live)
+    wal_seq: int  # last WAL record folded into this snapshot
+    generation: int
+    path: str  # the generation directory
+
+
+def build_state(index: HQIIndex, live: Optional[np.ndarray] = None) -> Dict[str, Any]:
+    """Capture the snapshot state tree — array *references*, no blob I/O.
+
+    Cheap enough to run under the serving layer's flush lock (the compactor
+    does): index mutations are replacements, so captured references stay
+    immutable while ``write_generation`` streams them to disk outside any
+    lock.
+    """
+    state: Dict[str, Any] = {"index": index.to_state()}
+    if live is not None:
+        state["live"] = np.asarray(live, dtype=bool)
+    return state
+
+
+def save_snapshot(
+    root: str,
+    index: HQIIndex,
+    *,
+    live: Optional[np.ndarray] = None,
+    wal_seq: int = 0,
+) -> str:
+    """Write one new generation; returns its name (e.g. ``gen-000002``).
+
+    ``live`` is the serving layer's tombstone mask over ``index.db`` rows and
+    ``wal_seq`` the last WAL record this snapshot covers — recovery replays
+    only records after it. Both default to the bare-index case.
+    """
+    return write_generation(root, build_state(index, live), wal_seq=wal_seq)
+
+
+def write_generation(root: str, state: Dict[str, Any], *, wal_seq: int = 0) -> str:
+    """Persist a captured state tree as the next generation (crash-safe)."""
+    os.makedirs(root, exist_ok=True)
+    gens = list_generations(root)
+    gen = (_gen_number(gens[-1]) + 1) if gens else 1
+    name = _gen_name(gen)
+    final_dir = os.path.join(root, name)
+    tmp_dir = final_dir + ".tmp"
+    # sweep a stale stage from a previous crashed save
+    if os.path.isdir(tmp_dir):
+        import shutil
+
+        shutil.rmtree(tmp_dir)
+
+    arrays: Dict[str, np.ndarray] = {}
+    tree = _externalize(state, arrays, "")
+    manifest = {
+        "format": FORMAT,
+        "version": VERSION,
+        "generation": gen,
+        "created_unix": time.time(),
+        "wal_seq": int(wal_seq),
+        "state": tree,
+    }
+
+    arrays_dir = os.path.join(tmp_dir, "arrays")
+    os.makedirs(arrays_dir)
+    for fname, arr in arrays.items():
+        path = os.path.join(arrays_dir, fname)
+        with open(path, "wb") as f:
+            np.save(f, np.ascontiguousarray(arr))
+            f.flush()
+            os.fsync(f.fileno())
+    # manifest LAST: its presence marks the generation complete
+    with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp_dir)
+    os.replace(tmp_dir, final_dir)
+    _fsync_dir(root)
+    _atomic_write(os.path.join(root, "CURRENT"), name + "\n")
+    return name
+
+
+def _validate_generation(root: str, name: str) -> Optional[dict]:
+    """Parsed manifest if the generation is complete and loadable, else None."""
+    gen_dir = os.path.join(root, name)
+    mpath = os.path.join(gen_dir, "manifest.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if manifest.get("format") != FORMAT or manifest.get("version") != VERSION:
+        return None
+    arrays_dir = os.path.join(gen_dir, "arrays")
+
+    def blobs_ok(node: Any) -> bool:
+        if isinstance(node, dict):
+            if _ARRAY_KEY in node:
+                fname = node[_ARRAY_KEY]
+                if os.path.basename(fname) != fname or fname.startswith(".."):
+                    return False
+                path = os.path.join(arrays_dir, fname)
+                if not os.path.isfile(path):
+                    return False
+                # npy header (~128 B) + payload; a short file is a torn write
+                expect = int(np.prod(node["shape"])) * np.dtype(node["dtype"]).itemsize
+                return os.path.getsize(path) >= expect
+            return all(blobs_ok(v) for v in node.values())
+        if isinstance(node, list):
+            return all(blobs_ok(v) for v in node)
+        return True
+
+    return manifest if blobs_ok(manifest.get("state", {})) else None
+
+
+def load_snapshot(root: str, *, mmap: bool = True) -> Snapshot:
+    """Load the newest valid generation (``CURRENT`` first, then fallback).
+
+    Raises ``SnapshotError`` when no generation is loadable. ``mmap=False``
+    forces full in-memory loads (tests / copying a snapshot elsewhere).
+    """
+    candidates: List[str] = []
+    current = os.path.join(root, "CURRENT")
+    if os.path.isfile(current):
+        with open(current) as f:
+            candidates.append(f.read().strip())
+    for name in reversed(list_generations(root)):
+        if name not in candidates:
+            candidates.append(name)
+    errors = []
+    for name in candidates:
+        manifest = _validate_generation(root, name)
+        if manifest is None:
+            continue
+        gen_dir = os.path.join(root, name)
+        try:
+            state = _internalize(
+                manifest["state"], os.path.join(gen_dir, "arrays"), mmap=mmap
+            )
+            live = state.get("live")
+            return Snapshot(
+                index=HQIIndex.from_state(state["index"]),
+                live=None if live is None else np.asarray(live),
+                wal_seq=int(manifest["wal_seq"]),
+                generation=int(manifest["generation"]),
+                path=gen_dir,
+            )
+        except Exception as e:
+            # a blob torn inside the validator's size margin (npy header) or
+            # any other decode failure: this generation is damaged goods —
+            # fall back to the next-newest candidate instead of failing a
+            # restart that an older, fully-valid generation could serve
+            errors.append(f"{name}: {e!r}")
+    raise SnapshotError(
+        f"no loadable snapshot generation under {root!r}"
+        + (f" (damaged candidates: {'; '.join(errors)})" if errors else "")
+    )
+
+
+def prune_generations(root: str, keep: int = 2) -> List[str]:
+    """Delete all but the newest ``keep`` generations; returns deleted names.
+
+    Never deletes the generation ``CURRENT`` points at (even if older ones
+    would be kept instead — CURRENT is what a concurrent loader follows).
+    """
+    import shutil
+
+    gens = list_generations(root)
+    current = None
+    cpath = os.path.join(root, "CURRENT")
+    if os.path.isfile(cpath):
+        with open(cpath) as f:
+            current = f.read().strip()
+    doomed = [g for g in gens[:-keep] if g != current] if keep > 0 else []
+    for name in doomed:
+        shutil.rmtree(os.path.join(root, name), ignore_errors=True)
+    # sweep stale stages too
+    for e in os.listdir(root) if os.path.isdir(root) else []:
+        if e.startswith(_GEN_PREFIX) and e.endswith(".tmp"):
+            shutil.rmtree(os.path.join(root, e), ignore_errors=True)
+    return doomed
