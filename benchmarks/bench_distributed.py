@@ -77,6 +77,34 @@ def _run() -> None:
         f"max/mean per-rank bytes = {st.per_rank_bytes.max() / max(mean_rank, 1):.2f}",
     )
 
+    # --- segmented vs dense merge footprint at mesh R (skewed routing) -------
+    # the dense sharded merge stacks [R, m, n_slots, k] before the gather, so
+    # the ragged win compounds with mesh size; ci.yml requires >= 4x here
+    from repro.kernels import ops as kops
+
+    nprobe_skew = {ti: (12 if ti == 0 else 1) for ti in range(len(wl.templates))}
+    peaks, results = {}, {}
+    for layout in ("dense", "segmented"):
+        hqi.cfg.plan.merge_layout = layout
+        kops.reset_dispatch_stats()
+        results[layout] = hqi.search(wl, nprobe=nprobe_skew, batch_vec=True)
+        peaks[layout] = int(kops.dispatch_stats().peak_candidate_bytes)
+    hqi.cfg.plan.merge_layout = "segmented"
+    parity = float(
+        np.array_equal(results["dense"].scores, results["segmented"].scores)
+        and np.array_equal(results["dense"].ids, results["segmented"].ids)
+    )
+    ratio = peaks["dense"] / max(peaks["segmented"], 1)
+    emit(
+        "distributed/skewed_peak_dense_bytes", float(peaks["dense"]),
+        f"R={R} stacked dense merge buffer, skewed routing",
+    )
+    emit(
+        "distributed/skewed_peak_segmented_bytes", float(peaks["segmented"]),
+        f"per-rank ragged gather ({ratio:.1f}x smaller at R={R})",
+    )
+    emit("distributed/skewed_parity_exact", 0.0, f"{parity:.3f}")
+
 
 def main() -> None:
     import jax

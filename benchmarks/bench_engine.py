@@ -59,6 +59,45 @@ def _pq_vs_f32(hqi, wl, nprobe: int) -> None:
     plan.scan_mode = "f32"
 
 
+def _skewed_memory(hqi, wl) -> None:
+    """Candidate-buffer footprint, dense vs segmented merge layout, under
+    SKEWED routing (one heavy template probing wide, the rest nprobe=1 — the
+    shape the dense [m, n_slots, k] tensor pads every query to).
+
+    Peak bytes are host-side shape accounting (DispatchStats), not timings:
+    deterministic, so ci.yml can hard-fail a regression back to the dense
+    m·n_slots·k bound. Results must stay bit-identical across layouts.
+    """
+    plan = hqi.cfg.plan
+    plan.scan_mode = "pq"  # the LUT rows are only meaningful on the ADC path
+    nprobe = {ti: (12 if ti == 0 else 1) for ti in range(len(wl.templates))}
+    peaks, luts = {}, {}
+    res = {}
+    for layout in ("dense", "segmented"):
+        plan.merge_layout = layout
+        ops.reset_dispatch_stats()
+        res[layout] = hqi.search(wl, nprobe=nprobe)
+        st = ops.dispatch_stats()
+        peaks[layout] = int(st.peak_candidate_bytes)
+        luts[layout] = int(st.lut_expand_bytes)
+    plan.merge_layout = "segmented"
+    plan.scan_mode = "f32"
+    exact = float(
+        np.array_equal(res["dense"].scores, res["segmented"].scores)
+        and np.array_equal(res["dense"].ids, res["segmented"].ids)
+    )
+    ratio = peaks["dense"] / max(peaks["segmented"], 1)
+    emit("engine/skewed_peak_dense_bytes", float(peaks["dense"]),
+         f"dense merge buffer, skewed routing ({wl.m} queries)")
+    emit("engine/skewed_peak_segmented_bytes", float(peaks["segmented"]),
+         f"flat CSR buffer, same workload ({ratio:.1f}x smaller)")
+    emit("engine/skewed_parity_exact", 0.0, f"{exact:.3f}")
+    emit("engine/lut_expand_dense_bytes", float(luts["dense"]),
+         "[W,TQ,M,256] operands the dense pq path materializes")
+    emit("engine/lut_expand_segmented_bytes", float(luts["segmented"]),
+         "must be 0: segmented pq indexes the resident table in-kernel")
+
+
 def main() -> None:
     kg = kg_style(n=min(N, 5000 if FAST else 50_000), d=D, queries_per_split=Q, seed=0)
     wl = kg.splits[0]
@@ -111,6 +150,9 @@ def main() -> None:
         ),
     )
     _pq_vs_f32(hqi_pq, wl, nprobe)
+
+    # --- segmented vs dense candidate-buffer footprint (skewed routing) ------
+    _skewed_memory(hqi_pq, wl)
 
 
 if __name__ == "__main__":

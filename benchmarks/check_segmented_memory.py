@@ -1,0 +1,62 @@
+"""CI guard: the segmented candidate pipeline must keep beating the dense
+merge bound.
+
+Parses BENCH_engine.json / BENCH_distributed.json (written by
+``python -m benchmarks.run --smoke``) and fails the build if
+
+  * the skewed-routing peak candidate-buffer bytes regress back to the dense
+    ``m·n_slots·k`` bound (engine: segmented < dense strictly; mesh: dense
+    must stay >= 4x segmented — the stacked [R, m, n_slots, k] layout is the
+    memory cliff this PR removed),
+  * the segmented pq path ever materializes a [W, TQ, M, 256] LUT operand
+    (lut_expand_segmented_bytes must be exactly 0), or
+  * either layout-parity row reports anything but bit-identical results.
+
+The guarded rows are host-side shape accounting, not timings — they are
+deterministic for a given workload, so a hard threshold cannot flake.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def _row(doc: dict, name: str) -> dict:
+    for r in doc["rows"]:
+        if r["name"] == name:
+            return r
+    sys.exit(f"FAIL: bench row {name!r} missing from BENCH_{doc['suite']}.json")
+
+
+def main() -> None:
+    eng = json.load(open("BENCH_engine.json"))
+    dense = _row(eng, "engine/skewed_peak_dense_bytes")["us_per_call"]
+    seg = _row(eng, "engine/skewed_peak_segmented_bytes")["us_per_call"]
+    if _row(eng, "engine/skewed_parity_exact")["derived"] != "1.000":
+        sys.exit("FAIL: segmented != dense results (engine)")
+    if not seg < dense:
+        sys.exit(
+            f"FAIL: segmented peak {seg:.0f} B regressed to the dense "
+            f"m*n_slots*k bound ({dense:.0f} B) on the skewed engine suite"
+        )
+    if _row(eng, "engine/lut_expand_segmented_bytes")["us_per_call"] != 0.0:
+        sys.exit("FAIL: segmented pq dispatch materialized a [W,TQ,M,256] LUT operand")
+
+    dist = json.load(open("BENCH_distributed.json"))
+    d = _row(dist, "distributed/skewed_peak_dense_bytes")["us_per_call"]
+    s = _row(dist, "distributed/skewed_peak_segmented_bytes")["us_per_call"]
+    if _row(dist, "distributed/skewed_parity_exact")["derived"] != "1.000":
+        sys.exit("FAIL: segmented != dense results (sharded)")
+    if not d >= 4 * s:
+        sys.exit(
+            f"FAIL: mesh skewed peak dense {d:.0f} B < 4x segmented {s:.0f} B "
+            "— the ragged per-rank gather lost its memory advantage"
+        )
+    print(
+        f"segmented-memory guard OK: engine {dense / max(seg, 1):.1f}x, "
+        f"mesh {d / max(s, 1):.1f}x smaller than dense"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -405,6 +405,8 @@ class HQIIndex:
             scores=run_s,
             tuples_scanned=stats.tuples_scanned,
             bytes_scanned=stats.bytes_scanned,
+            peak_candidate_bytes=stats.peak_candidate_bytes,
+            lut_bytes=stats.lut_bytes,
             shard_stats=shard_stats,
         )
 

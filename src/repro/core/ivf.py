@@ -30,11 +30,21 @@ class ScanStats:
     # tiles, or uint8 code tiles + re-rank rows in scan_mode="pq") — the HBM
     # traffic the compressed path exists to cut; engine path only
     bytes_scanned: int = 0
+    # largest candidate merge buffer (scores + ids) any single execution
+    # allocated — m·n_slots·k-shaped under merge_layout="dense", Σ segments·k
+    # under "segmented"; the quantity the skewed-routing bench compares
+    peak_candidate_bytes: int = 0
+    # ADC LUT bytes materialized on device: the resident [U, M, 256] table
+    # once per pq execution, plus (dense layout only) every per-bucket
+    # [W, TQ, M, 256] expansion — segmented keeps this at the resident size
+    lut_bytes: int = 0
 
     def __iadd__(self, o: "ScanStats"):
         self.tuples_scanned += o.tuples_scanned
         self.dists_computed += o.dists_computed
         self.bytes_scanned += o.bytes_scanned
+        self.peak_candidate_bytes = max(self.peak_candidate_bytes, o.peak_candidate_bytes)
+        self.lut_bytes += o.lut_bytes
         return self
 
 

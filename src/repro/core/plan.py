@@ -49,6 +49,14 @@ class PlanConfig:
     # ADC candidates kept per query = refine_factor · k; the exact re-rank
     # recovers recall lost to quantization (FAISS's "refine" stage)
     refine_factor: int = 4
+    # candidate merge layout: "segmented" (default) scatters per-unit top-ks
+    # into a flat CSR-style [Σ segments, k] buffer reduced by one ragged
+    # merge — peak merge memory tracks the REAL per-query slot counts, and
+    # the compressed scan indexes the resident LUT table directly (no
+    # [W, TQ, M, 256] expansion). "dense" keeps the rectangular
+    # [m, n_slots, k] tensor sized by the widest query (the comparison
+    # baseline the parity suite and the skewed-memory bench run against).
+    merge_layout: str = "segmented"
 
 
 @dataclasses.dataclass
@@ -80,7 +88,14 @@ class ExecutionPlan:
     tq: int
     m: int  # workload queries
     k: int
-    n_slots: int  # candidate slots per query in the merge tensor
+    n_slots: int  # candidate slots per query in the DENSE merge tensor (max)
+    # per-query REAL slot counts (seg_counts[q] slots were assigned to query
+    # q; n_slots == seg_counts.max()): the segmented executor's CSR segment
+    # widths, so its flat candidate buffer holds Σ seg_counts rows instead of
+    # m·n_slots
+    seg_counts: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64)
+    )
 
     @property
     def n_units(self) -> int:
@@ -167,6 +182,7 @@ def build_plan(
         m=m,
         k=k,
         n_slots=int(next_slot.max()) if m else 0,
+        seg_counts=next_slot,  # final per-query slot counts = segment widths
     )
 
 

@@ -9,11 +9,18 @@ This module executes that plan:
      run them in a single ``kernels.ops.workunit_topk`` dispatch — the
      single-matmul-per-posting-list of Alg. 3 line 10, fused with the
      Section 4.2 bitmap pushdown, megabatched across the workload;
-  2. scatter per-unit top-k into a [m, n_slots, k] candidate tensor, fold in
+  2. scatter per-unit top-k into the candidate buffer — by default a flat
+     segmented (CSR-style) [Σ seg_counts, k] buffer whose per-query segment
+     widths come from ``ExecutionPlan.seg_counts``
+     (``merge_layout="segmented"``); ``merge_layout="dense"`` keeps the
+     legacy [m, n_slots, k] tensor padded to the widest query — then fold in
      any per-query scan results the adaptive executor produced host-side;
   3. reduce candidates to the final per-query top-k with ONE device-side
-     segmented top-k (``ops.merge_topk``) — Alg. 3 line 12 for the whole
-     workload, replacing the per-(template × partition) numpy merge loop.
+     reduction (``ops.segmented_merge_topk`` / ``ops.merge_topk``) — Alg. 3
+     line 12 for the whole workload, replacing the per-(template ×
+     partition) numpy merge loop. Both layouts are bit-identical: the
+     segmented merge's stable sort reproduces ``lax.top_k``'s tie rule over
+     the same slot-major candidate order (tests/test_engine_segmented.py).
 
 Compressed execution (``PlanConfig.scan_mode="pq"``): the scan stage reads
 the arena's uint8 PQ codes instead of raw f32 vectors — each bucket is one
@@ -41,15 +48,18 @@ top-k candidates (``ops.sharded_merge_topk``, O(k·|model|) traffic). Results
 are bit-identical to ``execute_plan``; ``core/distributed.py`` is the thin
 mesh entry.
 
-Known scale tradeoff: the merge tensor is dense [m, n_slots, k] where
-``n_slots`` is the *max* per-query slot count over the workload, so queries
-routed to few partitions pay for the widest query's slots — and the sharded
-path allocates it PER RANK ([R, m, n_slots, k]). The sharded scan operands
-pay the same dense-stacking tax: each bucket ships [R, W, ...] where W is
-the MAX per-rank unit count, so a shard-skewed unit distribution transfers
-mostly-masked slices for the light ranks. At very large m × n_slots (or
-heavy skew) a segmented (ragged) candidate layout is the next memory lever
-(ROADMAP).
+Memory: the segmented layout holds Σ seg_counts·k candidate rows instead of
+m·n_slots·k, so queries routed to few partitions no longer pay for the
+widest query's slots; on the sharded path each rank contributes only its
+REAL segments to the pre-gather merge (Σ per-rank segments·k, vs the dense
+[R, m, n_slots, k] stack). The pq path additionally keeps the workload's
+ADC tables resident as one [U, M, 256] array and indexes them from inside
+the kernel (``workunit_pq_topk_resident`` / the scalar-prefetch streamed
+grid), never materializing the per-bucket [W, TQ, M, 256] expansion the
+dense layout pays (``DispatchStats.lut_expand_bytes`` stays 0). Remaining
+dense-stacking tax: sharded scan *operands* still ship [R, W, ...] per
+bucket where W is the MAX per-rank unit count, so a shard-skewed unit
+distribution transfers mostly-masked slices for the light ranks (ROADMAP).
 
 ``batch_search_ivf`` survives as the single-index entry point (used by the
 baselines and benchmarks): it wraps the index in a one-partition arena,
@@ -80,6 +90,45 @@ from .pq import PQCodebook, adc_tables
 # Extra per-query candidates merged alongside the plan's output (the adaptive
 # executor's host-side scans): (qrows i64 [mq], scores f32 [mq, k], ids i64 [mq, k])
 ExtraCandidates = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
+
+def _account_candidates(stats: Optional[ScanStats], nbytes: int) -> None:
+    """Record one candidate merge buffer allocation (scores + ids bytes):
+    per-search peak in ScanStats, process-wide peak in DispatchStats — the
+    figure the skewed-routing bench and the CI memory guard watch."""
+    kops.dispatch_stats().record_candidate_bytes(nbytes)
+    if stats is not None:
+        stats.peak_candidate_bytes = max(stats.peak_candidate_bytes, int(nbytes))
+
+
+def _account_lut(stats: Optional[ScanStats], nbytes: int, *, expanded: bool) -> None:
+    """Record ADC LUT bytes materialized on device. ``expanded=True`` marks a
+    per-unit [W, TQ, M, 256] expansion (the dense layout's gather operand) and
+    also feeds ``DispatchStats.lut_expand_bytes`` — the counter the segmented
+    path must leave untouched."""
+    if expanded:
+        kops.dispatch_stats().record_lut_expand(nbytes)
+    if stats is not None:
+        stats.lut_bytes += int(nbytes)
+
+
+def _seg_offsets(
+    plan_counts: np.ndarray, extra: Sequence[ExtraCandidates], m: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """CSR layout of the flat candidate buffer: (counts [m], offsets [m+1]).
+
+    Query q owns flat rows offsets[q] .. offsets[q+1]-1 — its plan slots
+    first (``plan_counts[q]`` of them, addressed as offsets[q] + slot), then
+    one row per host-side extra. The per-query order matches the dense
+    tensor's slot-major flattening, so the segmented merge selects the
+    identical top-k (ties included)."""
+    extra_counts = np.zeros(m, dtype=np.int64)
+    for qrows, _, _ in extra:
+        extra_counts[qrows] += 1
+    counts = plan_counts + extra_counts
+    offsets = np.zeros(m + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return counts, offsets
 
 
 def _assemble_bucket(
@@ -144,6 +193,8 @@ def execute_plan(
         return _execute_plan_pq(plan, arena, q_vecs, cfg=cfg, extra=extra, stats=stats)
     if cfg.scan_mode not in ("f32", "pq"):
         raise ValueError(f"unknown scan_mode {cfg.scan_mode!r}")
+    if cfg.merge_layout not in ("segmented", "dense"):
+        raise ValueError(f"unknown merge_layout {cfg.merge_layout!r}")
     m, k, tq = plan.m, plan.k, plan.tq
     # extras get per-query-dense slot columns after the plan's own slots
     n_slots = plan.n_slots + _extra_slot_width(extra, m)
@@ -152,11 +203,30 @@ def execute_plan(
             np.full((m, k), -np.inf, np.float32),
             np.full((m, k), -1, np.int64),
         )
+    if cfg.merge_layout == "segmented":
+        return _execute_plan_f32_segmented(
+            plan, arena, q_vecs, cfg=cfg, extra=extra, stats=stats
+        )
 
     out_scores = np.full((m, n_slots, k), -np.inf, dtype=np.float32)
     out_idx = np.full((m, n_slots, k), -1, dtype=np.int64)
+    _account_candidates(stats, out_scores.nbytes + out_idx.nbytes)
     d = q_vecs.shape[1]
 
+    for kk, qr, sl, s_w, gidx_w in _iter_f32_buckets(plan, arena, q_vecs, cfg, stats):
+        out_scores[qr, sl, :kk] = s_w
+        out_idx[qr, sl, :kk] = gidx_w
+
+    return _fold_extras_and_merge(out_scores, out_idx, extra, plan.n_slots, k)
+
+
+def _iter_f32_buckets(plan, arena, q_vecs, cfg, stats):
+    """Run the f32 scan stage bucket by bucket (one ``workunit_topk`` dispatch
+    each), yielding (kk, qrows, slots, scores [n, kk], gids [n, kk]) for the
+    real unit slots — the scatter destination is the only thing the dense and
+    segmented layouts disagree on, so the scan math lives here once."""
+    m, k, tq = plan.m, plan.k, plan.tq
+    d = q_vecs.shape[1]
     for lp in sorted(plan.buckets):
         units = plan.buckets[lp]
         Vrows, valid, qrow_of, slot_of = _assemble_bucket(units, lp, plan, arena)
@@ -189,12 +259,66 @@ def execute_plan(
         )
         gidx = arena.gid[packed_rows]
         gidx = np.where(i_loc < 0, -1, gidx)
-        qr = qrow_of[wmask]
-        sl = slot_of[wmask]
-        out_scores[qr, sl, :kk] = s[wmask]
-        out_idx[qr, sl, :kk] = gidx[wmask]
+        yield kk, qrow_of[wmask], slot_of[wmask], s[wmask], gidx[wmask]
 
-    return _fold_extras_and_merge(out_scores, out_idx, extra, plan.n_slots, k)
+
+def _plan_seg_counts(plan: ExecutionPlan) -> np.ndarray:
+    """Per-query plan slot counts, tolerating plans built before the field
+    existed (deserialized or hand-constructed): fall back to the dense
+    assumption that every query owns ``n_slots`` slots."""
+    if len(plan.seg_counts) == plan.m:
+        return plan.seg_counts
+    return np.full(plan.m, plan.n_slots, dtype=np.int64)
+
+
+def _execute_plan_f32_segmented(
+    plan: ExecutionPlan,
+    arena: Optional[PackedArena],
+    q_vecs: np.ndarray,
+    *,
+    cfg: PlanConfig,
+    extra: Sequence[ExtraCandidates],
+    stats: Optional[ScanStats],
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Segmented (CSR) counterpart of the dense f32 path.
+
+    Per-unit top-ks scatter into ONE flat [C_pad, k] buffer at
+    offsets[q] + slot — query q's segment holds exactly its own plan slots
+    plus its host-side extras, so peak merge memory is Σ seg_counts·k
+    instead of m·n_slots·k. One ``segmented_merge_topk`` dispatch reduces
+    every ragged segment; within each segment candidates keep the dense
+    layout's slot-major order, so results are bit-identical (parity suite).
+    """
+    m, k = plan.m, plan.k
+    plan_counts = _plan_seg_counts(plan)
+    counts, offsets = _seg_offsets(plan_counts, extra, m)
+    C_total = int(offsets[-1])
+    C_pad = _next_pow2(C_total, 1)
+    flat_s = np.full((C_pad, k), -np.inf, dtype=np.float32)
+    flat_i = np.full((C_pad, k), -1, dtype=np.int64)
+    seg_of = np.full(C_pad, m, dtype=np.int32)  # pad rows -> dropped segment
+    seg_of[:C_total] = np.repeat(np.arange(m, dtype=np.int32), counts)
+    _account_candidates(stats, flat_s.nbytes + flat_i.nbytes)
+
+    for kk, qr, sl, s_w, gidx_w in _iter_f32_buckets(plan, arena, q_vecs, cfg, stats):
+        rows = offsets[qr] + sl
+        flat_s[rows, :kk] = s_w
+        flat_i[rows, :kk] = gidx_w
+
+    # extras take the rows after each query's plan slots (same relative order
+    # as the dense layout's extra columns)
+    next_extra = plan_counts.copy()
+    for qrows, es, ei in extra:
+        kk = min(k, es.shape[1])
+        rows = offsets[qrows] + next_extra[qrows]
+        next_extra[qrows] += 1
+        flat_s[rows, :kk] = es[:, :kk]
+        flat_i[rows, :kk] = ei[:, :kk]
+
+    top_s, top_i = kops.segmented_merge_topk(
+        jnp.asarray(flat_s), jnp.asarray(flat_i), jnp.asarray(seg_of), m, k
+    )
+    return np.asarray(top_s, dtype=np.float32), np.asarray(top_i, dtype=np.int64)
 
 
 def _extra_slot_width(extra: Sequence[ExtraCandidates], m: int) -> int:
@@ -262,18 +386,17 @@ def _execute_plan_pq(
     final merge then folds in the adaptive executor's host-side candidates,
     exactly like the f32 path.
     """
-    m, k, tq = plan.m, plan.k, plan.tq
-    d = q_vecs.shape[1]
+    m, k = plan.m, plan.k
     kprime = max(k, int(cfg.refine_factor) * k)
 
     # ADC tables only for queries the plan actually scans (the adaptive
     # executor may have routed most of the workload to host-side extras),
-    # shipped to the device ONCE; each bucket's per-unit [W, tq, M, 256]
-    # operand is expanded by a device-side gather, so the host never
-    # materializes the replicated tables and every dispatch reuses the same
-    # resident [U, M, 256] array. (Streaming LUT rows inside the kernel via
-    # scalar-prefetch index maps would kill the device-side expansion too —
-    # see ROADMAP.)
+    # shipped to the device ONCE as a resident [U, M, 256] array. The
+    # segmented layout indexes it directly from the dispatch (per-unit-slot
+    # LUT rows via scalar-prefetch on the Pallas path) so no per-bucket
+    # [W, tq, M, 256] operand ever materializes; the dense layout keeps the
+    # device-side gather expansion as the comparison baseline, which
+    # ``DispatchStats.lut_expand_bytes`` meters.
     used = np.unique(
         np.concatenate(
             [u.qrows for units in plan.buckets.values() for u in units]
@@ -282,9 +405,37 @@ def _execute_plan_pq(
     lut_pos = np.zeros(m, dtype=np.int64)
     lut_pos[used] = np.arange(len(used))
     luts_dev = jnp.asarray(adc_tables(arena.pq, q_vecs[used]))  # [U, M, 256]
+    _account_lut(stats, int(luts_dev.nbytes), expanded=False)
 
+    if cfg.merge_layout == "segmented":
+        rows = _pq_stage_a_segmented(
+            plan, arena, luts_dev, lut_pos, kprime, cfg=cfg, stats=stats
+        )
+    else:
+        rows = _pq_stage_a_dense(
+            plan, arena, luts_dev, lut_pos, kprime, cfg=cfg, stats=stats
+        )
+    return _pq_rerank_and_fold(
+        arena, q_vecs, rows, k=k, kprime=kprime, cfg=cfg, extra=extra, stats=stats
+    )
+
+
+def _pq_stage_a_dense(
+    plan: ExecutionPlan,
+    arena: PackedArena,
+    luts_dev: jnp.ndarray,  # f32 [U, M, 256]
+    lut_pos: np.ndarray,  # i64 [m] — LUT row per workload query
+    kprime: int,
+    *,
+    cfg: PlanConfig,
+    stats: Optional[ScanStats],
+) -> np.ndarray:
+    """Dense ADC stage A: [m, n_slots, k'] scatter + rectangular merge.
+    Returns the surviving global packed rows i64 [m, k'] (-1 pad)."""
+    m = plan.m
     cand_s = np.full((m, plan.n_slots, kprime), -np.inf, dtype=np.float32)
     cand_rows = np.full((m, plan.n_slots, kprime), -1, dtype=np.int64)
+    _account_candidates(stats, cand_s.nbytes + cand_rows.nbytes)
 
     for lp in sorted(plan.buckets):
         units = plan.buckets[lp]
@@ -295,6 +446,7 @@ def _execute_plan_pq(
         luts = jnp.take(
             luts_dev, jnp.asarray(lut_pos[np.maximum(qrow_of, 0)]), axis=0
         )  # [W, tq, M, 256], gathered on device
+        _account_lut(stats, int(luts.nbytes), expanded=True)
         codes = arena.codes[Vrows]  # [W, lp, M] uint8 — the compressed gather
         if stats is not None:
             stats.bytes_scanned += len(units) * lp * arena.codes.shape[1]
@@ -321,10 +473,91 @@ def _execute_plan_pq(
         cand_rows[qr, sl, :kk] = packed_rows[wmask]
 
     # per-query top-k' ADC candidates across every bucket and probe slot
-    top_cs, top_rows = _padded_merge(
+    _, top_rows = _padded_merge(
         cand_s.reshape(m, -1), cand_rows.reshape(m, -1), kprime
     )
-    rows = np.asarray(top_rows, dtype=np.int64)  # [m, k'] packed rows (-1 pad)
+    return np.asarray(top_rows, dtype=np.int64)  # [m, k'] packed rows (-1 pad)
+
+
+def _pq_stage_a_segmented(
+    plan: ExecutionPlan,
+    arena: PackedArena,
+    luts_dev: jnp.ndarray,  # f32 [U, M, 256]
+    lut_pos: np.ndarray,  # i64 [m]
+    kprime: int,
+    *,
+    cfg: PlanConfig,
+    stats: Optional[ScanStats],
+) -> np.ndarray:
+    """Segmented ADC stage A: flat [Σ seg_counts, k'] scatter + ragged merge.
+
+    Each bucket dispatches ``workunit_pq_topk_resident`` — the kernel indexes
+    the resident LUT table by per-slot row, so the dense path's per-bucket
+    [W, tq, M, 256] expansion never materializes (lut_expand_bytes stays 0).
+    Returns the surviving global packed rows i64 [m, k'] (-1 pad).
+    """
+    m = plan.m
+    counts = _plan_seg_counts(plan)  # stage A has no extras; they fold post re-rank
+    offsets = np.zeros(m + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    C_total = int(offsets[-1])
+    C_pad = _next_pow2(C_total, 1)
+    flat_s = np.full((C_pad, kprime), -np.inf, dtype=np.float32)
+    flat_rows = np.full((C_pad, kprime), -1, dtype=np.int64)
+    seg_of = np.full(C_pad, m, dtype=np.int32)
+    seg_of[:C_total] = np.repeat(np.arange(m, dtype=np.int32), counts)
+    _account_candidates(stats, flat_s.nbytes + flat_rows.nbytes)
+
+    for lp in sorted(plan.buckets):
+        units = plan.buckets[lp]
+        Vrows, valid, qrow_of, slot_of = _assemble_bucket(units, lp, plan, arena)
+        wmask = qrow_of >= 0
+        lut_idx = lut_pos[np.maximum(qrow_of, 0)]  # [W, tq]; pads -> LUT row 0
+        codes = arena.codes[Vrows]  # [W, lp, M] uint8
+        if stats is not None:
+            stats.bytes_scanned += len(units) * lp * arena.codes.shape[1]
+        kk = min(kprime, lp)
+        s, i_loc = kops.workunit_pq_topk_resident(
+            luts_dev,
+            jnp.asarray(lut_idx),
+            jnp.asarray(codes),
+            jnp.asarray(valid),
+            kk,
+            use_pallas=cfg.use_pallas,
+            interpret=cfg.interpret,
+        )
+        s = np.asarray(s)
+        i_loc = np.asarray(i_loc)
+        packed_rows = np.take_along_axis(
+            np.broadcast_to(Vrows[:, None, :], i_loc.shape[:2] + (lp,)),
+            np.maximum(i_loc, 0),
+            axis=2,
+        )
+        packed_rows = np.where(i_loc < 0, -1, packed_rows)
+        qr = qrow_of[wmask]
+        rows_f = offsets[qr] + slot_of[wmask]
+        flat_s[rows_f, :kk] = s[wmask]
+        flat_rows[rows_f, :kk] = packed_rows[wmask]
+
+    _, top_rows = kops.segmented_merge_topk(
+        jnp.asarray(flat_s), jnp.asarray(flat_rows), jnp.asarray(seg_of), m, kprime
+    )
+    return np.asarray(top_rows, dtype=np.int64)
+
+
+def _pq_rerank_and_fold(
+    arena: PackedArena,
+    q_vecs: np.ndarray,
+    rows: np.ndarray,  # i64 [m, k'] surviving global packed rows (-1 pad)
+    *,
+    k: int,
+    kprime: int,
+    cfg: PlanConfig,
+    extra: Sequence[ExtraCandidates],
+    stats: Optional[ScanStats],
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage B shared by both layouts: exact re-rank + extras fold."""
+    m, d = q_vecs.shape
 
     # exact re-rank: one gather of the surviving f32 rows + one dispatch.
     # Units are per-query (TQ=1) so each query re-scores only ITS candidates;
@@ -360,6 +593,7 @@ def _execute_plan_pq(
     n_slots = 1 + _extra_slot_width(extra, m)
     out_scores = np.full((m, n_slots, k), -np.inf, dtype=np.float32)
     out_idx = np.full((m, n_slots, k), -1, dtype=np.int64)
+    _account_candidates(stats, out_scores.nbytes + out_idx.nbytes)
     out_scores[:, 0, :kk] = np.where(gidx >= 0, s, -np.inf)
     out_idx[:, 0, :kk] = gidx
     return _fold_extras_and_merge(out_scores, out_idx, extra, 1, k)
@@ -549,6 +783,43 @@ def _gather_merge(
     return np.asarray(ms, dtype=np.float32), np.asarray(mi, dtype=np.int64)
 
 
+def _rank_segments(
+    splan: ShardedPlan, R: int, m: int
+) -> Tuple[int, List[np.ndarray], np.ndarray, np.ndarray]:
+    """Per-rank CSR layout for the sharded segmented merge.
+
+    Every (query, slot) pair lives in exactly one work unit, hence on exactly
+    one rank — so each rank's candidate rows are the sorted set of its own
+    ``q · S + slot`` keys (S spans the slot range). Returns
+    (S, rank_keys [R sorted i64 arrays], base [R+1] flat-row offsets,
+    seg_of [Σ|keys|] i32): rank r's candidates occupy flat rows
+    base[r]..base[r+1]-1 with segment id r·m + q — ascending, because rows
+    sort by (rank, query, slot). One segmented merge over R·m segments then
+    equals every rank's local [m, k] top-k, with the light ranks paying for
+    exactly their own segments instead of a dense [R, m, n_slots, k] stack.
+    """
+    S = max(splan.plan.n_slots, 1)
+    rank_keys: List[np.ndarray] = []
+    base = np.zeros(R + 1, dtype=np.int64)
+    segs: List[np.ndarray] = []
+    for r in range(R):
+        ks = [
+            u.qrows * S + u.slots
+            for units in splan.rank_buckets[r].values()
+            for u in units
+        ]
+        kr = np.sort(np.concatenate(ks)) if ks else np.zeros(0, dtype=np.int64)
+        rank_keys.append(kr)
+        base[r + 1] = base[r] + len(kr)
+        segs.append(r * m + (kr // S).astype(np.int32))
+    seg_of = (
+        np.concatenate(segs).astype(np.int32)
+        if int(base[-1])
+        else np.zeros(0, dtype=np.int32)
+    )
+    return S, rank_keys, base, seg_of
+
+
 def _execute_sharded_f32(
     splan: ShardedPlan,
     sharded: ShardedArena,
@@ -566,8 +837,19 @@ def _execute_sharded_f32(
     d = q_vecs.shape[1]
     arena = sharded.base
     n_slots = splan.plan.n_slots
-    cand_s = np.full((R, m, n_slots, k), -np.inf, dtype=np.float32)
-    cand_i = np.full((R, m, n_slots, k), -1, dtype=np.int64)
+    segmented = cfg.merge_layout == "segmented"
+    if segmented:
+        S, rank_keys, base, seg_pref = _rank_segments(splan, R, m)
+        C_pad = _next_pow2(int(base[-1]), 1)
+        flat_s = np.full((C_pad, k), -np.inf, dtype=np.float32)
+        flat_i = np.full((C_pad, k), -1, dtype=np.int64)
+        seg_of = np.full(C_pad, R * m, dtype=np.int32)
+        seg_of[: int(base[-1])] = seg_pref
+        _account_candidates(stats, flat_s.nbytes + flat_i.nbytes)
+    else:
+        cand_s = np.full((R, m, n_slots, k), -np.inf, dtype=np.float32)
+        cand_i = np.full((R, m, n_slots, k), -1, dtype=np.int64)
+        _account_candidates(stats, cand_s.nbytes + cand_i.nbytes)
 
     for lp in splan.pads:
         unit_lists, Q, valid, qrow_of, slot_of, Vrows, wmask = _assemble_bucket_stacked(
@@ -602,10 +884,29 @@ def _execute_sharded_f32(
             gidx = arena.gid[packed_rows]
             gidx = np.where(i_loc[r] < 0, -1, gidx)
             qr, sl = qrow_of[r][wmask[r]], slot_of[r][wmask[r]]
-            cand_s[r, qr, sl, :kk] = s[r][wmask[r]]
-            cand_i[r, qr, sl, :kk] = gidx[wmask[r]]
+            if segmented:
+                rows = base[r] + np.searchsorted(rank_keys[r], qr * S + sl)
+                flat_s[rows, :kk] = s[r][wmask[r]]
+                flat_i[rows, :kk] = gidx[wmask[r]]
+            else:
+                cand_s[r, qr, sl, :kk] = s[r][wmask[r]]
+                cand_i[r, qr, sl, :kk] = gidx[wmask[r]]
 
-    ms, mi = _gather_merge(mesh, axis, cand_s, cand_i, k)
+    if segmented:
+        # one ragged merge over R·m segments = every rank's local top-k; the
+        # gather merge's rank-local reduction over these already-sorted rows
+        # is an identity, so the all-gather sees the dense path's operands
+        seg_s, seg_i = kops.segmented_merge_topk(
+            jnp.asarray(flat_s), jnp.asarray(flat_i), jnp.asarray(seg_of), R * m, k
+        )
+        ms, mi = _gather_merge(
+            mesh, axis,
+            np.asarray(seg_s, dtype=np.float32).reshape(R, m, 1, k),
+            np.asarray(seg_i, dtype=np.int64).reshape(R, m, 1, k),
+            k,
+        )
+    else:
+        ms, mi = _gather_merge(mesh, axis, cand_s, cand_i, k)
     sstats.gathered_per_query += R * k
     return _merge_with_extras(ms, mi, extra, k)
 
@@ -649,10 +950,22 @@ def _execute_sharded_pq(
     lut_pos = np.zeros(m, dtype=np.int64)
     lut_pos[used] = np.arange(len(used))
     luts_dev = jnp.asarray(adc_tables(arena.pq, q_vecs[used]))  # [U, M, 256]
+    _account_lut(stats, int(luts_dev.nbytes), expanded=False)
 
     n_slots = splan.plan.n_slots
-    cand_s = np.full((R, m, n_slots, kprime), -np.inf, dtype=np.float32)
-    cand_rows = np.full((R, m, n_slots, kprime), -1, dtype=np.int64)
+    segmented = cfg.merge_layout == "segmented"
+    if segmented:
+        S, rank_keys, base, seg_pref = _rank_segments(splan, R, m)
+        C_pad = _next_pow2(int(base[-1]), 1)
+        flat_s = np.full((C_pad, kprime), -np.inf, dtype=np.float32)
+        flat_rows = np.full((C_pad, kprime), -1, dtype=np.int64)
+        seg_of = np.full(C_pad, R * m, dtype=np.int32)
+        seg_of[: int(base[-1])] = seg_pref
+        _account_candidates(stats, flat_s.nbytes + flat_rows.nbytes)
+    else:
+        cand_s = np.full((R, m, n_slots, kprime), -np.inf, dtype=np.float32)
+        cand_rows = np.full((R, m, n_slots, kprime), -1, dtype=np.int64)
+        _account_candidates(stats, cand_s.nbytes + cand_rows.nbytes)
 
     for lp in splan.pads:
         unit_lists, _, valid, qrow_of, slot_of, Vrows, wmask = _assemble_bucket_stacked(
@@ -669,10 +982,20 @@ def _execute_sharded_pq(
             stats.bytes_scanned += int(sum(len(u) for u in unit_lists)) * lp * M
         lut_idx = lut_pos[np.maximum(qrow_of, 0)]  # padding slots -> LUT row 0
         kk = min(kprime, lp)
+        if not segmented:
+            # the dense dispatch expands per-unit [W, tq, M, 256] LUT operands
+            # on every rank; the segmented (stream=True) dispatch indexes the
+            # resident table from the kernel instead
+            W = valid.shape[1]
+            tq = splan.plan.tq
+            _account_lut(
+                stats, R * W * tq * M * 256 * 4, expanded=True
+            )
         s, i_loc = kops.sharded_workunit_pq_topk(
             mesh, axis,
             luts_dev, jnp.asarray(lut_idx), jnp.asarray(codes), jnp.asarray(valid), kk,
             use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+            stream=segmented,
         )
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)
@@ -686,12 +1009,29 @@ def _execute_sharded_pq(
             )
             packed_rows = np.where(i_loc[r] < 0, -1, packed_rows)  # global rows
             qr, sl = qrow_of[r][wmask[r]], slot_of[r][wmask[r]]
-            cand_s[r, qr, sl, :kk] = s[r][wmask[r]]
-            cand_rows[r, qr, sl, :kk] = packed_rows[wmask[r]]
+            if segmented:
+                rws = base[r] + np.searchsorted(rank_keys[r], qr * S + sl)
+                flat_s[rws, :kk] = s[r][wmask[r]]
+                flat_rows[rws, :kk] = packed_rows[wmask[r]]
+            else:
+                cand_s[r, qr, sl, :kk] = s[r][wmask[r]]
+                cand_rows[r, qr, sl, :kk] = packed_rows[wmask[r]]
 
     # global top-k' ADC candidates: k'·|model| gather, identical selection to
     # the single-device merge (a global survivor survives locally too)
-    _, top_rows = _gather_merge(mesh, axis, cand_s, cand_rows, kprime)
+    if segmented:
+        seg_s, seg_i = kops.segmented_merge_topk(
+            jnp.asarray(flat_s), jnp.asarray(flat_rows), jnp.asarray(seg_of),
+            R * m, kprime,
+        )
+        _, top_rows = _gather_merge(
+            mesh, axis,
+            np.asarray(seg_s, dtype=np.float32).reshape(R, m, 1, kprime),
+            np.asarray(seg_i, dtype=np.int64).reshape(R, m, 1, kprime),
+            kprime,
+        )
+    else:
+        _, top_rows = _gather_merge(mesh, axis, cand_s, cand_rows, kprime)
     sstats.gathered_per_query += R * kprime
     rows = top_rows  # [m, k'] global packed rows (-1 pad)
 

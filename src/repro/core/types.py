@@ -261,6 +261,12 @@ class SearchResult:
     scores: np.ndarray
     tuples_scanned: int = 0  # distance computations performed (paper metric 2)
     bytes_scanned: int = 0  # arena bytes gathered by the engine's scan stages
+    # largest candidate merge buffer one execution allocated (scores + ids):
+    # the memory figure the segmented layout exists to shrink
+    peak_candidate_bytes: int = 0
+    # ADC LUT bytes materialized on device (pq scans only): resident tables,
+    # plus per-bucket expansions under merge_layout="dense"
+    lut_bytes: int = 0
     # per-rank accounting when the search ran on a device mesh
     # (core.planner.ShardStats; annotated loosely so types stays import-light)
     shard_stats: Optional[object] = None

@@ -41,6 +41,13 @@ class DispatchStats:
     ``shapes`` holds the distinct (W, TQ, TV, k) problem shapes seen — a proxy
     for XLA compile-cache pressure that the engine's shape budget bounds.
 
+    ``peak_candidate_bytes`` is the largest candidate merge buffer any single
+    execution materialized (scores + ids) — the memory the segmented layout
+    exists to shrink on skewed routing. ``lut_expand_bytes`` accumulates the
+    bytes of every expanded per-unit [W, TQ, M, 256] ADC LUT operand; the
+    resident-table dispatch path never records here, so a zero delta across a
+    compressed search is the "no LUT expansion" assertion the tests make.
+
     Thread-safe: the serving layer's scheduler thread (repro.service) and
     foreground callers both dispatch kernels, so all mutation goes through a
     lock; read a consistent copy with ``snapshot()``.
@@ -49,6 +56,8 @@ class DispatchStats:
     knn_calls: int = 0
     merge_calls: int = 0
     shapes: set = dataclasses.field(default_factory=set)
+    peak_candidate_bytes: int = 0
+    lut_expand_bytes: int = 0
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False
     )
@@ -62,11 +71,21 @@ class DispatchStats:
         with self._lock:
             self.merge_calls += 1
 
+    def record_candidate_bytes(self, nbytes: int) -> None:
+        with self._lock:
+            self.peak_candidate_bytes = max(self.peak_candidate_bytes, int(nbytes))
+
+    def record_lut_expand(self, nbytes: int) -> None:
+        with self._lock:
+            self.lut_expand_bytes += int(nbytes)
+
     def reset(self) -> None:
         with self._lock:
             self.knn_calls = 0
             self.merge_calls = 0
             self.shapes = set()
+            self.peak_candidate_bytes = 0
+            self.lut_expand_bytes = 0
 
     def snapshot(self) -> "DispatchStats":
         """Consistent point-in-time copy (counters + shape set)."""
@@ -75,6 +94,8 @@ class DispatchStats:
                 knn_calls=self.knn_calls,
                 merge_calls=self.merge_calls,
                 shapes=set(self.shapes),
+                peak_candidate_bytes=self.peak_candidate_bytes,
+                lut_expand_bytes=self.lut_expand_bytes,
             )
 
 
@@ -229,6 +250,47 @@ def _workunit_pq_topk_jnp(luts, codes, valid, k):
     return _ref.workunit_pq_topk_ref(luts, codes, valid, k)
 
 
+def workunit_pq_topk_resident(
+    table: jax.Array,  # f32 [U, M, 256] — the workload's resident ADC tables
+    lut_idx: jax.Array,  # i32 [W, TQ] — per-slot row into ``table``
+    codes: jax.Array,  # uint8 [W, TV, M]
+    valid: jax.Array,  # bool [W, TV]
+    k: int,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Compressed work-unit dispatch indexing the resident LUT table directly.
+
+    ``workunit_pq_topk`` takes pre-expanded per-unit [W, TQ, M, 256] tables —
+    an operand the caller must materialize per bucket. This entry point takes
+    the workload's resident [U, M, 256] table once plus per-slot row indices:
+    on the Pallas path the kernel streams each unit's LUT rows from HBM into
+    VMEM via scalar-prefetch index maps (``workunit_pq_scan_streamed``), so
+    no [W, TQ, M, 256] array ever exists; on the jnp path the row gather
+    happens inside the jit (fused by XLA, never a caller-visible operand).
+    Numerics match ``workunit_pq_topk`` over ``take(table, lut_idx)`` exactly.
+    """
+    _DISPATCH.record_knn(
+        ("pq-res", lut_idx.shape[0], lut_idx.shape[1], codes.shape[1], int(k))
+    )
+    use_pallas = _DEFAULT_PALLAS if use_pallas is None else use_pallas
+    interpret = _DEFAULT_INTERPRET if interpret is None else interpret
+    if use_pallas:
+        from .pq_scan import workunit_pq_scan_streamed
+
+        return workunit_pq_scan_streamed(
+            table, lut_idx, codes, valid, k=int(k), interpret=interpret
+        )
+    return _workunit_pq_topk_resident_jnp(table, lut_idx, codes, valid, int(k))
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _workunit_pq_topk_resident_jnp(table, lut_idx, codes, valid, k):
+    luts = jnp.take(table, lut_idx, axis=0)  # fused into the scan by XLA
+    return _ref.workunit_pq_topk_ref(luts, codes, valid, k)
+
+
 # --------------------------------------------------------------------------
 # Sharded dispatch (device-mesh execution, see core/planner.py's sharded path)
 #
@@ -314,13 +376,17 @@ def sharded_workunit_pq_topk(
     *,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
+    stream: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Compressed (ADC) sharded scan — ``workunit_pq_topk`` across the mesh.
 
-    The workload's ADC tables ship once, replicated; each rank expands its
-    per-unit [W, TQ, M, 256] LUT operand with an on-device gather (same
-    scheme as the single-device path) and scans only ITS code tiles.
-    Collective-free.
+    The workload's ADC tables ship once, replicated. With ``stream=False``
+    (the dense merge layout) each rank expands its per-unit [W, TQ, M, 256]
+    LUT operand with an on-device gather before the scan. With ``stream=True``
+    (the segmented layout) the rank's kernel indexes the resident table
+    directly — the Pallas kernel DMA-streams LUT rows via scalar-prefetch
+    index maps, the jnp path fuses the row gather into the jitted scan — so
+    the expanded operand never exists. Collective-free either way.
     """
     R = codes.shape[0]
     _DISPATCH.record_knn(("sh-pq", R, codes.shape[1], lut_idx.shape[2], codes.shape[2], int(k)))
@@ -328,7 +394,7 @@ def sharded_workunit_pq_topk(
     interpret = _DEFAULT_INTERPRET if interpret is None else interpret
     key = (
         "pq", mesh, axis, luts.shape, lut_idx.shape, codes.shape,
-        int(k), use_pallas, interpret,
+        int(k), use_pallas, interpret, bool(stream),
     )
 
     def build():
@@ -337,6 +403,14 @@ def sharded_workunit_pq_topk(
         from ..distributed.sharding import shard_map_compat
 
         def local(luts_l, idx_l, codes_l, valid_l):
+            if stream and use_pallas:
+                from .pq_scan import workunit_pq_scan_streamed
+
+                s, i = workunit_pq_scan_streamed(
+                    luts_l, idx_l[0].astype(jnp.int32), codes_l[0], valid_l[0],
+                    k=int(k), interpret=interpret,
+                )
+                return s[None], i[None]
             per_unit = jnp.take(luts_l, idx_l[0], axis=0)  # [W, TQ, M, 256]
             if use_pallas:
                 from .pq_scan import workunit_pq_scan
@@ -382,8 +456,7 @@ def sharded_merge_topk(
         def local(sl, il):  # [1, m, C] per rank
             top, pos = jax.lax.top_k(sl[0], int(k))
             li = jnp.take_along_axis(il[0], pos.astype(il.dtype), axis=1)
-            top = jnp.where(li < 0, -jnp.inf, top)
-            li = jnp.where(jnp.isfinite(top), li, -1)
+            top, li = _ref.normalize_merge_sentinels(top, li)
             all_s = jax.lax.all_gather(top, axis)  # [R, m, k] — THE comm step
             all_i = jax.lax.all_gather(li, axis)
             m = sl.shape[1]
@@ -391,9 +464,7 @@ def sharded_merge_topk(
             cat_i = jnp.moveaxis(all_i, 0, 1).reshape(m, -1)
             t, p = jax.lax.top_k(cat_s, int(k))
             oi = jnp.take_along_axis(cat_i, p.astype(cat_i.dtype), axis=1)
-            t = jnp.where(oi < 0, -jnp.inf, t)
-            oi = jnp.where(jnp.isfinite(t), oi, -1)
-            return t, oi
+            return _ref.normalize_merge_sentinels(t, oi)
 
         return jax.jit(_shard_map(local, mesh, axis, 2, 2, out_sharded=False))
 
@@ -420,7 +491,29 @@ def merge_topk(
 def _merge_topk_jnp(scores, idx, k):
     top, pos = jax.lax.top_k(scores, k)
     out_i = jnp.take_along_axis(idx, pos.astype(idx.dtype), axis=1)
-    # normalize sentinels: absent results are (-inf, -1) on every path
-    top = jnp.where(out_i < 0, -jnp.inf, top)
-    out_i = jnp.where(jnp.isfinite(top), out_i, -1)
-    return top, out_i
+    return _ref.normalize_merge_sentinels(top, out_i)
+
+
+def segmented_merge_topk(
+    flat_s: jax.Array,  # f32 [C, kk] — flat candidate rows (CSR layout)
+    flat_i: jax.Array,  # i64 [C, kk] — candidate ids (-1 = absent)
+    seg_of: jax.Array,  # i32 [C] — owning query per row, ascending; >= n_segments = pad
+    n_segments: int,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Ragged per-query top-k reduction — the segmented ``merge_topk``.
+
+    One dispatch reduces every query's variable-width candidate segment to
+    its top-k: queries routed to few partitions no longer pay the widest
+    query's ``n_slots`` columns, so the merge buffer is Σ segments·kk instead
+    of m·n_slots·kk (and per RANK on the sharded path). Bit-identical to the
+    dense merge over the same per-segment candidate order — see
+    ``ref.segmented_merge_topk_ref``.
+    """
+    _DISPATCH.record_merge()
+    return _segmented_merge_topk_jnp(flat_s, flat_i, seg_of, int(n_segments), int(k))
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "k"))
+def _segmented_merge_topk_jnp(flat_s, flat_i, seg_of, n_segments, k):
+    return _ref.segmented_merge_topk_ref(flat_s, flat_i, seg_of, n_segments, k)

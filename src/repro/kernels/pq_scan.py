@@ -231,3 +231,136 @@ def workunit_pq_scan(
         interpret=interpret,
     )
     return call(luts_f, codes_p, valid_p)
+
+
+# ---------------------------------------------------------------------------
+# Streamed-LUT work-unit ADC scan: the resident table never expands
+# ---------------------------------------------------------------------------
+
+
+def _workunit_pq_streamed_kernel(
+    idx_ref,  # SMEM i32 [W, TQ] — scalar-prefetched LUT row per unit slot
+    table_ref,  # HBM f32 [U, M*256] — the resident ADC table, NEVER expanded
+    codes_ref,  # [1, TV, M] uint8
+    valid_ref,  # [1, TV] int32
+    out_s_ref,  # [1, TQ, K]
+    out_i_ref,  # [1, TQ, K]
+    lut_vmem,  # scratch f32 [TQ, M*256] — this unit's streamed LUT rows
+    acc_s_ref,  # scratch f32 [TQ, K]
+    acc_i_ref,  # scratch i32 [TQ, K]
+    sem,  # DMA completion semaphore
+    *,
+    k: int,
+    tv: int,
+    tq: int,
+    m: int,
+    nv_tiles: int,
+):
+    w = pl.program_id(0)
+    j = pl.program_id(1)  # code tile (inner) — w outer, so scratch is per-unit
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s_ref[...] = jnp.full(acc_s_ref.shape, NEG_INF, jnp.float32)
+        acc_i_ref[...] = jnp.full(acc_i_ref.shape, -1, jnp.int32)
+        # gather this unit's TQ LUT rows HBM -> VMEM, addressed through the
+        # prefetched index vector: the per-unit [TQ, M*256] block is BUILT in
+        # VMEM by DMA, so no [W, TQ, M, 256] operand is ever materialized
+        for t in range(tq):
+            dma = pltpu.make_async_copy(
+                table_ref.at[idx_ref[w, t]], lut_vmem.at[t], sem
+            )
+            dma.start()
+            dma.wait()
+
+    codes = codes_ref[0].astype(jnp.int32)  # [TV, M] — uint8 widened in-register
+    iota = jax.lax.broadcasted_iota(jnp.int32, (tv, m, 256), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32).reshape(tv, m * 256)
+    scores = jax.lax.dot_general(
+        lut_vmem[...], onehot, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [TQ, TV] — same contraction as _workunit_pq_kernel
+    valid = valid_ref[0, :] != 0
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    gidx = jnp.where(valid[None, :], col + j * tv, -1)
+
+    new_s, new_i = _merge_topk(acc_s_ref[...], acc_i_ref[...], scores, gidx, k)
+    acc_s_ref[...] = new_s
+    acc_i_ref[...] = new_i
+
+    @pl.when(j == nv_tiles - 1)
+    def _flush():
+        out_s_ref[...] = new_s[None]
+        out_i_ref[...] = new_i[None]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "tv", "interpret"))
+def workunit_pq_scan_streamed(
+    table: jax.Array,  # f32 [U, M, 256] — resident per-query ADC tables
+    lut_idx: jax.Array,  # i32 [W, TQ] — LUT row per unit slot (0 for padding)
+    codes: jax.Array,  # uint8 [W, NV, M] — gathered code rows per unit
+    valid: jax.Array,  # bool [W, NV]
+    *,
+    k: int,
+    tv: int = 512,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Work-unit ADC grid that streams LUT rows straight out of the resident
+    table.
+
+    Same [W, TV] sweep and one-hot MXU contraction as ``workunit_pq_scan``,
+    but the per-unit LUT block is assembled in VMEM by per-row DMA from the
+    [U, M·256] HBM table, addressed through a scalar-prefetched index vector
+    (``PrefetchScalarGridSpec``). The [W, TQ, M, 256] expansion — W·TQ/U×
+    redundant HBM traffic plus its allocation — is gone; each unit reads
+    exactly the TQ rows it scans with.
+
+    Returns (scores f32 [W, TQ, k] best-first, idx i32 [W, TQ, k]; -1 = none).
+    """
+    u, m, nbook = table.shape
+    assert nbook == 256, "PQ codebooks are 8-bit (256 entries)"
+    w, tq = lut_idx.shape
+    nv = codes.shape[1]
+    k = int(k)
+    # shrink the tile to the (pow2-padded) list length so short posting lists
+    # don't pay a full 512-row sweep (same rule as workunit_pq_scan)
+    tv = min(tv, max(8, 1 << max(0, nv - 1).bit_length()))
+    nv_p = max(tv, ((nv + tv - 1) // tv) * tv)
+    codes_p = jnp.zeros((w, nv_p, m), jnp.uint8).at[:, :nv].set(codes.astype(jnp.uint8))
+    valid_p = jnp.zeros((w, nv_p), jnp.int32).at[:, :nv].set(valid.astype(jnp.int32))
+    table_f = table.reshape(u, m * nbook)
+    nv_tiles = nv_p // tv
+
+    kernel = functools.partial(
+        _workunit_pq_streamed_kernel, k=k, tv=tv, tq=tq, m=m, nv_tiles=nv_tiles
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # lut_idx rides ahead of the grid in SMEM
+        grid=(w, nv_tiles),  # unit outer, code tile inner
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),  # table stays in HBM
+            pl.BlockSpec((1, tv, m), lambda w_, j, idx: (w_, j, 0)),
+            pl.BlockSpec((1, tv), lambda w_, j, idx: (w_, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tq, k), lambda w_, j, idx: (w_, 0, 0)),
+            pl.BlockSpec((1, tq, k), lambda w_, j, idx: (w_, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, m * nbook), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+            pltpu.SemaphoreType.DMA(()),
+        ],
+    )
+    call = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((w, tq, k), jnp.float32),
+            jax.ShapeDtypeStruct((w, tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    return call(lut_idx.astype(jnp.int32), table_f, codes_p, valid_p)

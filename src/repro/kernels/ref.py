@@ -12,6 +12,70 @@ import jax.numpy as jnp
 NEG_INF = float(-3.4e38)
 
 
+def normalize_merge_sentinels(
+    scores: jax.Array, idx: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Canonical absent-result encoding shared by every merge path.
+
+    Merge inputs carry two sentinel flavors — ``-inf`` (allocation padding)
+    and the kernels' finite ``NEG_INF`` with idx -1 — and a top-k over them
+    can pair a finite sentinel score with a real-looking index or vice versa.
+    This maps every absent entry to exactly (-inf, -1): an entry is absent
+    iff its idx is negative or its score is non-finite.
+    """
+    scores = jnp.where(idx < 0, -jnp.inf, scores)
+    idx = jnp.where(jnp.isfinite(scores), idx, -1)
+    return scores, idx
+
+
+def segmented_merge_topk_ref(
+    flat_s: jax.Array,  # f32 [C, kk] — candidate rows, any per-segment count
+    flat_i: jax.Array,  # int [C, kk] — candidate ids (-1 = absent)
+    seg_of: jax.Array,  # i32 [C] — owning segment per row, ASCENDING; >= n_segments = drop
+    n_segments: int,
+    k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Ragged per-segment top-k oracle: CSR-style rows -> [n_segments, k].
+
+    The segmented counterpart of ``merge_topk``: instead of a dense
+    [m, n_slots, kk] tensor padded to the widest query, candidates arrive as
+    a flat [C, kk] buffer whose rows belong to segments (queries) of varying
+    width. One stable sort by (segment, -score) ranks every candidate inside
+    its segment; rank < k survives. Stability preserves the original
+    candidate order among EXACTLY equal scores, which is ``lax.top_k``'s
+    smallest-index-first tie rule — so results are bit-identical to the
+    dense merge over the same per-segment candidate sequence (the parity
+    suite asserts ids AND scores). Rows whose ``seg_of`` is ``n_segments``
+    or above are padding and are dropped.
+    """
+    C, kk = flat_s.shape
+    if n_segments == 0:
+        return (
+            jnp.zeros((0, k), jnp.float32),
+            jnp.zeros((0, k), flat_i.dtype),
+        )
+    n = C * kk
+    s = flat_s.reshape(n)
+    i = flat_i.reshape(n)
+    seg = jnp.repeat(seg_of.astype(jnp.int32), kk)
+    order = jnp.lexsort((-s, seg))  # stable: ties keep candidate order
+    s_s, i_s, seg_s = s[order], i[order], seg[order]
+    starts = jnp.searchsorted(seg_s, jnp.arange(n_segments, dtype=seg_s.dtype))
+    pos = jnp.arange(n) - starts[jnp.clip(seg_s, 0, max(n_segments - 1, 0))]
+    keep = (seg_s < n_segments) & (pos < k)
+    rows = jnp.where(keep, seg_s, n_segments)  # out-of-range row -> dropped
+    cols = jnp.where(keep, pos, 0)
+    out_s = (
+        jnp.full((n_segments, k), -jnp.inf, jnp.float32)
+        .at[rows, cols].set(s_s.astype(jnp.float32), mode="drop")
+    )
+    out_i = (
+        jnp.full((n_segments, k), -1, flat_i.dtype)
+        .at[rows, cols].set(i_s, mode="drop")
+    )
+    return normalize_merge_sentinels(out_s, out_i)
+
+
 def pairwise_scores_ref(q: jax.Array, v: jax.Array, metric: str = "ip") -> jax.Array:
     """Similarity scores, best = max. q [nq,d], v [nv,d] -> f32 [nq,nv].
 

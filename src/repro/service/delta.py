@@ -71,6 +71,10 @@ class DeltaStore:
         self._db: Optional[VectorDatabase] = None
         self._dead = np.zeros(0, dtype=bool)
         self._codes: Optional[np.ndarray] = None  # uint8 [n, M], iff pq
+        # rows prepared (ids handed out) but not yet committed — group-commit
+        # inserts prepare under the service lock, then commit in id order
+        # after the shared fsync, so id assignment must advance at prepare
+        self._reserved = 0
 
     @property
     def n(self) -> int:
@@ -126,7 +130,8 @@ class DeltaStore:
         vectors = np.atleast_2d(np.asarray(vectors, dtype=np.float32))
         assert vectors.shape[1] == self._schema.d, "vector dimension mismatch"
         n = vectors.shape[0]
-        ids = self.first_id + self.n + np.arange(n, dtype=np.int64)
+        ids = self.first_id + self.n + self._reserved + np.arange(n, dtype=np.int64)
+        self._reserved += n
         slab = VectorDatabase(
             vectors=vectors,
             columns=self._make_columns(n, columns, null_masks),
@@ -136,8 +141,16 @@ class DeltaStore:
         return slab, ids
 
     def commit_insert(self, slab: VectorDatabase, ids: np.ndarray) -> np.ndarray:
-        """Apply a prepared insert (no validation — see ``prepare_insert``)."""
+        """Apply a prepared insert (no validation — see ``prepare_insert``).
+
+        Prepared slabs MUST commit in id order (the service's group-commit
+        path tickets them): rows concatenate, so first_id + position = id.
+        """
         n = slab.n
+        assert n == 0 or self.first_id + self.n == int(ids[0]), (
+            "commit_insert out of id order"
+        )
+        self._reserved = max(0, self._reserved - n)
         self._db = slab if self._db is None else VectorDatabase.concat(self._db, slab)
         self._dead = np.concatenate([self._dead, np.zeros(n, dtype=bool)])
         if self.pq is not None:
@@ -218,6 +231,7 @@ class DeltaStore:
         self._db = None
         self._dead = np.zeros(0, dtype=bool)
         self._codes = None
+        self._reserved = 0
         self.first_id = int(first_id)
 
 

@@ -131,6 +131,15 @@ class HQIService:
         # the delta buffer — what a snapshot of this service covers
         # (store.compact reads it; store.recovery seeds it after a replay)
         self._wal_folded_seq = 0 if wal is None else wal.last_seq
+        # group commit bookkeeping: writers stage their WAL record under the
+        # state lock (fixing seq order = id order), share one fsync outside
+        # it, then apply in ticket order — _applied_seq is the highest seq
+        # whose effects are actually in (delta, _live), which is what a fold
+        # may claim as covered (wal.last_seq could include records a
+        # concurrent writer has staged but not yet applied)
+        self._commit_head = 0
+        self._commit_tail = 0
+        self._applied_seq = 0 if wal is None else wal.last_seq
         self.scheduler = MicroBatchScheduler(
             max_batch=self.cfg.max_batch,
             deadline_s=self.cfg.deadline_s,
@@ -150,6 +159,8 @@ class HQIService:
         # snapshot take it BRIEFLY — kernel dispatch happens outside it, so
         # submit()/insert()/delete() never block for a flush's duration
         self._lock = threading.RLock()
+        # writers park here until their commit ticket comes up (group commit)
+        self._commit_cv = threading.Condition(self._lock)
         # flush lock serializes the out-of-lock pipeline sections: flushes
         # against each other (single logical consumer) and against refresh(),
         # which swaps index structures the in-flight search reads
@@ -190,14 +201,33 @@ class HQIService:
         With a WAL attached the insert is committed durably BEFORE the ids
         are returned — an acknowledged insert survives a crash (recovery
         replays the WAL tail into a fresh delta store, same ids). Ordering:
-        validate → WAL append+fsync → apply, so a rejected insert is never
-        logged and a failed append never leaves unlogged rows visible.
+        validate → WAL stage → group fsync → apply, so a rejected insert is
+        never logged and a failed stage never leaves unlogged rows visible.
+        Concurrent writers share one fsync (WAL group commit): each stages
+        its record under the state lock — fixing seq order = id order, the
+        invariant recovery's replay asserts — then blocks on
+        ``wal.sync_upto`` outside it, and applies in ticket (= seq) order.
         """
+        if self.wal is None:
+            with self._lock:
+                slab, ids = self.delta.prepare_insert(vectors, columns, null_masks)
+                self.delta.commit_insert(slab, ids)
+            return ids
         with self._lock:
             slab, ids = self.delta.prepare_insert(vectors, columns, null_masks)
-            if self.wal is not None:
-                self.wal.log_insert(slab.vectors, ids, columns, null_masks)
-            self.delta.commit_insert(slab, ids)
+            seq = self.wal.stage_insert(slab.vectors, ids, columns, null_masks)
+            ticket = self._commit_tail
+            self._commit_tail += 1
+        try:
+            self.wal.sync_upto(seq)
+        finally:
+            # apply even when the fsync failed: the frame is in the log (a
+            # replay would re-apply it) and later tickets' id-ordered commits
+            # depend on this slab's rows being in place; the caller still
+            # sees the durability error because the exception propagates
+            self._commit_in_order(
+                ticket, seq, lambda: self.delta.commit_insert(slab, ids)
+            )
         return ids
 
     def delete(self, ids: Iterable[int]) -> int:
@@ -205,14 +235,41 @@ class HQIService:
 
         With a WAL attached the delete is committed durably BEFORE it is
         acknowledged and before any tombstone is applied (same contract as
-        ``insert``; replay is idempotent).
+        ``insert``; replay is idempotent). Deletes join the same group-commit
+        ticket queue as inserts, so tombstones apply in WAL seq order — the
+        order a recovery replay reproduces.
         """
+        ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+        if self.wal is None:
+            with self._lock:
+                return self._delete_locked(ids)
         with self._lock:
-            ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
-            if self.wal is not None:
-                self.wal.log_delete(ids)
-            n = self._delete_locked(ids)
+            seq = self.wal.stage_delete(ids)
+            ticket = self._commit_tail
+            self._commit_tail += 1
+        try:
+            self.wal.sync_upto(seq)
+        finally:
+            n = self._commit_in_order(ticket, seq, lambda: self._delete_locked(ids))
         return n
+
+    def _commit_in_order(self, ticket: int, seq: int, apply_fn):
+        """Run a staged write's apply step when its ticket comes up.
+
+        Tickets are taken in the same critical section that staged the WAL
+        record, so ticket order == seq order — applying in ticket order keeps
+        the live state's mutation order identical to what a replay of the log
+        would produce (and keeps ``commit_insert``'s id-order contract).
+        """
+        with self._commit_cv:
+            while self._commit_head != ticket:
+                self._commit_cv.wait()
+            try:
+                return apply_fn()
+            finally:
+                self._commit_head += 1
+                self._applied_seq = max(self._applied_seq, seq)
+                self._commit_cv.notify_all()
 
     def _delete_locked(self, ids: Iterable[int]) -> int:
         """Apply tombstones without WAL commit (shared with WAL replay)."""
@@ -273,12 +330,15 @@ class HQIService:
                 self.delta.clear(first_id=self.index.db.n)
                 n = delta_db.n
             if self.wal is not None:
-                # with the delta (now) empty, EVERY committed record's effect
+                # with the delta (now) empty, EVERY applied record's effect
                 # lives in (index, _live): inserts were just folded, deletes
                 # tombstoned _live at commit time — so a delete-only interval
                 # also advances the folded seq and seals its segment (or the
-                # WAL could never be pruned under delete-heavy traffic)
-                self._wal_folded_seq = self.wal.last_seq
+                # WAL could never be pruned under delete-heavy traffic).
+                # _applied_seq, not wal.last_seq: a concurrent group-commit
+                # writer may have STAGED a record it hasn't applied yet, and
+                # claiming that seq as folded would drop it from recovery
+                self._wal_folded_seq = self._applied_seq
                 self.wal.rotate()
             return n
 
@@ -336,7 +396,7 @@ class HQIService:
                 delta_view = self.delta.view()
             before = kops.dispatch_stats().snapshot()
             t0 = time.perf_counter()
-            ids, scores = self._answer(wl, live, delta_view)
+            ids, scores, res = self._answer(wl, live, delta_view)
             dt = time.perf_counter() - t0
             after = kops.dispatch_stats().snapshot()
             t_done = time.perf_counter()
@@ -352,16 +412,18 @@ class HQIService:
                     merge_dispatches=after.merge_calls - before.merge_calls,
                     seconds=dt,
                     latencies=lats,
+                    peak_candidate_bytes=res.peak_candidate_bytes,
+                    lut_bytes=res.lut_bytes,
                 )
         return n_real
 
-    def _answer(
-        self, wl: Workload, live: np.ndarray, delta_view
-    ) -> Tuple[np.ndarray, np.ndarray]:
-        """(ids i64 [m, k], scores f32 [m, k]): engine + delta, merged.
+    def _answer(self, wl: Workload, live: np.ndarray, delta_view):
+        """(ids i64 [m, k], scores f32 [m, k], SearchResult): engine + delta.
 
         Operates on the flush's snapshots (live mask copy, immutable delta
-        view) so it can run outside the state lock.
+        view) so it can run outside the state lock. The engine's
+        ``SearchResult`` rides along for the flush's telemetry (candidate
+        buffer peak, LUT bytes).
         """
         res = self.index.search(
             wl,
@@ -376,12 +438,12 @@ class HQIService:
             refine_factor=self.index.cfg.plan.refine_factor,
         )
         if delta_out is None:
-            return res.ids, res.scores
+            return res.ids, res.scores, res
         ds, di = delta_out
         cat_s = np.concatenate([res.scores, ds], axis=1)
         cat_i = np.concatenate([res.ids, di], axis=1)
         ms, mi = kops.merge_topk(jnp.asarray(cat_s), jnp.asarray(cat_i), wl.k)
-        return np.asarray(mi, dtype=np.int64), np.asarray(ms, dtype=np.float32)
+        return np.asarray(mi, dtype=np.int64), np.asarray(ms, dtype=np.float32), res
 
     # ----------------------------------------------------- background driver
 

@@ -22,6 +22,10 @@ class FlushRecord:
     knn_dispatches: int
     merge_dispatches: int
     seconds: float  # wall time of the flush's answer pipeline
+    # memory observability: the flush's largest candidate merge buffer and
+    # the ADC LUT bytes it materialized (0 for f32 scans)
+    peak_candidate_bytes: int = 0
+    lut_bytes: int = 0
 
 
 class ServiceTelemetry:
@@ -46,6 +50,8 @@ class ServiceTelemetry:
         self._merge = 0
         self._size_sum = 0
         self._max_depth = 0
+        self._peak_candidate_bytes = 0
+        self._lut_bytes = 0
 
     # ------------------------------------------------------------- recording
 
@@ -58,10 +64,15 @@ class ServiceTelemetry:
         merge_dispatches: int,
         seconds: float,
         latencies: Sequence[float],
+        peak_candidate_bytes: int = 0,
+        lut_bytes: int = 0,
     ) -> None:
         with self._lock:
             self._flushes.append(
-                FlushRecord(size, queue_depth, knn_dispatches, merge_dispatches, seconds)
+                FlushRecord(
+                    size, queue_depth, knn_dispatches, merge_dispatches, seconds,
+                    peak_candidate_bytes, lut_bytes,
+                )
             )
             self._latencies.extend(float(x) for x in latencies)
             self._n_queries += len(latencies)
@@ -71,6 +82,10 @@ class ServiceTelemetry:
             self._merge += merge_dispatches
             self._size_sum += size
             self._max_depth = max(self._max_depth, queue_depth)
+            self._peak_candidate_bytes = max(
+                self._peak_candidate_bytes, int(peak_candidate_bytes)
+            )
+            self._lut_bytes += int(lut_bytes)
 
     def record_rejected(self) -> None:
         with self._lock:
@@ -103,6 +118,8 @@ class ServiceTelemetry:
                 "knn_dispatches_per_flush": (self._knn / n_f) if n_f else 0.0,
                 "merge_dispatches_per_flush": (self._merge / n_f) if n_f else 0.0,
                 "busy_qps": (n_q / self._busy_s) if self._busy_s > 0 else 0.0,
+                "peak_candidate_bytes": float(self._peak_candidate_bytes),
+                "lut_bytes_per_flush": (self._lut_bytes / n_f) if n_f else 0.0,
             }
         out["p50_latency_s"] = self.latency_percentile(50.0)
         out["p99_latency_s"] = self.latency_percentile(99.0)

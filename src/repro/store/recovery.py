@@ -123,4 +123,7 @@ def open_service(
     replay_into(svc, wal, after_seq=snap.wal_seq)
     svc.wal = wal
     svc._wal_folded_seq = snap.wal_seq
+    # every record on disk is now applied (replayed or snapshot-covered); a
+    # fold may claim up to here — the group-commit apply path advances it
+    svc._applied_seq = wal.last_seq
     return svc

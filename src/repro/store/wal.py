@@ -35,6 +35,7 @@ import dataclasses
 import io
 import os
 import struct
+import threading
 import zlib
 from typing import Dict, Iterator, List, Optional, Tuple
 
@@ -119,9 +120,16 @@ def _scan_intact(data: bytes) -> Tuple[int, int]:
 class WriteAheadLog:
     """Single-writer append log over a directory of sealed + one open segment.
 
-    ``sync=True`` (default) fsyncs every append — the durability contract the
-    service's ack depends on. Benchmarks may relax it; the frame CRC still
-    bounds the damage to the unsynced tail.
+    ``sync=True`` (default) fsyncs before any record is acknowledged — the
+    durability contract the service's ack depends on. Benchmarks may relax
+    it; the frame CRC still bounds the damage to the unsynced tail.
+
+    Group commit: ``stage()`` writes a frame (assigning its seq) without
+    fsyncing; ``sync_upto(seq)`` makes it durable, and concurrent callers
+    share ONE fsync — the first waiter becomes the leader, fsyncs everything
+    staged so far, and wakes the rest, so N threads committing concurrently
+    pay ~1 fsync instead of N (the classic WAL group commit). ``append`` is
+    stage + sync_upto, preserving the single-caller contract unchanged.
     """
 
     def __init__(self, path: str, *, sync: bool = True) -> None:
@@ -131,6 +139,12 @@ class WriteAheadLog:
         self._fh: Optional[io.BufferedWriter] = None
         self._seg: Optional[str] = None
         self.last_seq = 0
+        # group-commit state: _mu orders frame writes (seq assignment must
+        # match file order — replay equates the two); _cv hands off the
+        # fsync leadership; _synced_seq is the durable high-water mark
+        self._mu = threading.RLock()
+        self._cv = threading.Condition(self._mu)
+        self._sync_leader = False
         segs = self.segments()
         open_last = False
         for name in segs:
@@ -158,6 +172,7 @@ class WriteAheadLog:
                 open_last = not sealed
         if open_last:
             self._open_segment(segs[-1])
+        self._synced_seq = self.last_seq  # everything on disk is durable
 
     # ------------------------------------------------------------------ write
 
@@ -172,18 +187,63 @@ class WriteAheadLog:
             # power loss after the ack could lose the whole new segment
             _fsync_dir(self.path)
 
+    def stage(self, kind: int, arrays: Dict[str, np.ndarray]) -> int:
+        """Write one record to the OS (ordered, CRC-framed) without fsync.
+
+        Returns its sequence number; the record is NOT durable until a
+        ``sync_upto`` covering that seq returns. The payload is encoded
+        outside the lock, so concurrent stagers only serialize on the
+        actual frame write (which fixes seq order = file order = replay
+        order, the invariant recovery's id-stability assert depends on).
+        """
+        payload = _encode_payload(arrays)
+        with self._mu:
+            if self._fh is None:
+                self._open_segment(_seg_name(self.last_seq + 1))
+            seq = self.last_seq + 1
+            frame = _HEADER.pack(_MAGIC, seq, kind, len(payload), zlib.crc32(payload))
+            self._fh.write(frame + payload)
+            self._fh.flush()
+            self.last_seq = seq
+        return seq
+
+    def sync_upto(self, seq: int) -> int:
+        """Block until record ``seq`` is durable; batches concurrent callers.
+
+        The first caller to find ``seq`` unsynced becomes the leader: it
+        fsyncs ONCE, covering every record staged up to that moment, then
+        wakes all waiters — whoever's seq the batch covered returns without
+        issuing its own fsync. Returns the durable high-water mark.
+        """
+        if not self.sync:
+            return self.last_seq
+        with self._cv:
+            while True:
+                if self._synced_seq >= seq:
+                    return self._synced_seq
+                if not self._sync_leader:
+                    break  # take leadership for the next fsync batch
+                self._cv.wait()
+            self._sync_leader = True
+            fh = self._fh
+            upto = self.last_seq
+        ok = False
+        try:
+            if fh is not None:
+                os.fsync(fh.fileno())
+            ok = True
+        finally:
+            with self._cv:
+                self._sync_leader = False
+                if ok and fh is not None:
+                    self._synced_seq = max(self._synced_seq, upto)
+                self._cv.notify_all()
+        return self._synced_seq
+
     def append(self, kind: int, arrays: Dict[str, np.ndarray]) -> int:
         """Commit one record durably; returns its sequence number."""
-        if self._fh is None:
-            self._open_segment(_seg_name(self.last_seq + 1))
-        payload = _encode_payload(arrays)
-        seq = self.last_seq + 1
-        frame = _HEADER.pack(_MAGIC, seq, kind, len(payload), zlib.crc32(payload))
-        self._fh.write(frame + payload)
-        self._fh.flush()
-        if self.sync:
-            os.fsync(self._fh.fileno())
-        self.last_seq = seq
+        seq = self.stage(kind, arrays)
+        self.sync_upto(seq)
         return seq
 
     def rotate(self) -> None:
@@ -195,14 +255,21 @@ class WriteAheadLog:
         this segment's content is complete (a bad frame inside it is bit
         rot to surface, not a torn tail to truncate).
         """
-        if self._fh is not None:
-            self._fh.write(_HEADER.pack(_MAGIC, self.last_seq, KIND_SEAL, 0, 0))
-            self._fh.flush()
-            if self.sync:
-                os.fsync(self._fh.fileno())
-            self._fh.close()
-            self._fh = None
-            self._seg = None
+        with self._cv:
+            while self._sync_leader:
+                # an in-flight group fsync holds the segment's fd; closing
+                # it under the leader would fsync a dead descriptor
+                self._cv.wait()
+            if self._fh is not None:
+                self._fh.write(_HEADER.pack(_MAGIC, self.last_seq, KIND_SEAL, 0, 0))
+                self._fh.flush()
+                if self.sync:
+                    os.fsync(self._fh.fileno())
+                self._fh.close()
+                self._fh = None
+                self._seg = None
+            self._synced_seq = max(self._synced_seq, self.last_seq)
+            self._cv.notify_all()
 
     def close(self) -> None:
         self.rotate()
@@ -222,6 +289,22 @@ class WriteAheadLog:
     def log_delete(self, ids) -> int:
         """Commit one acknowledged delete request (replay is idempotent)."""
         return self.append(
+            KIND_DELETE, {"ids": np.atleast_1d(np.asarray(ids, dtype=np.int64))}
+        )
+
+    def stage_insert(
+        self,
+        vectors: np.ndarray,
+        ids: np.ndarray,
+        columns: Optional[Dict[str, np.ndarray]] = None,
+        null_masks: Optional[Dict[str, np.ndarray]] = None,
+    ) -> int:
+        """Stage an insert for group commit; durable after ``sync_upto``."""
+        return self.stage(KIND_INSERT, insert_arrays(vectors, ids, columns, null_masks))
+
+    def stage_delete(self, ids) -> int:
+        """Stage a delete for group commit; durable after ``sync_upto``."""
+        return self.stage(
             KIND_DELETE, {"ids": np.atleast_1d(np.asarray(ids, dtype=np.int64))}
         )
 

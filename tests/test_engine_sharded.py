@@ -261,7 +261,9 @@ def test_sharded_dispatch_budget():
             s, i = batch_search_ivf(ivf, q, nprobe=16, k=5, cfg=cfg, mesh=mesh_of(8))
             st = ops.dispatch_stats()
             assert 0 < st.knn_calls <= budget, st.knn_calls
-            assert st.merge_calls == 1
+            # segmented layout: one ragged pre-merge + the gather merge —
+            # still O(1) merges per execution, never O(buckets)
+            assert st.merge_calls == 2, st.merge_calls
             ss, si = batch_search_ivf(ivf, q, nprobe=16, k=5, cfg=cfg)
             assert_exact(ss, si, s, i, f"budget={budget}")
         print("sharded dispatch budget OK")
@@ -373,4 +375,48 @@ def test_sharded_property_parity():
 
         prop()
         print("property parity OK")
+    """)
+
+
+def test_sharded_merge_layout_parity():
+    """merge_layout="segmented" == "dense" on the SHARDED path, bit-for-bit,
+    across mesh sizes, scan modes, and skewed per-template routing — and the
+    segmented layout's flat per-rank gather keeps lut_expand_bytes at 0 on
+    the pq path while the dense layout pays the expanded-LUT operand."""
+    run("""
+        import dataclasses
+        from repro.kernels import ops as kops
+
+        db = small_db(n=1100, seed=21)
+        wl = small_workload(db, n_queries=40, seed=5)
+        nprobe = {ti: (12 if ti == 0 else 1) for ti in range(len(wl.templates))}
+        for scan_kw in ({}, dict(scan_mode="pq", pq_m=4)):
+            hqi = HQIIndex.build(db, wl, HQIConfig(
+                min_partition_size=128, max_leaves=32,
+                plan=PlanConfig(use_pallas=False), **scan_kw))
+            for R in MESH_SIZES:
+                hqi.cfg.mesh = mesh_of(R)
+                # snapshot scalars immediately: dispatch_stats() returns the
+                # live singleton, which the next reset() zeroes in place
+                hqi.cfg.plan.merge_layout = "dense"
+                kops.reset_dispatch_stats()
+                dres = hqi.search(wl, nprobe=nprobe)
+                dense_peak = int(kops.dispatch_stats().peak_candidate_bytes)
+                dense_lut = int(kops.dispatch_stats().lut_expand_bytes)
+                hqi.cfg.plan.merge_layout = "segmented"
+                kops.reset_dispatch_stats()
+                sres = hqi.search(wl, nprobe=nprobe)
+                seg_peak = int(kops.dispatch_stats().peak_candidate_bytes)
+                seg_lut = int(kops.dispatch_stats().lut_expand_bytes)
+                assert_exact(dres.scores, dres.ids, sres.scores, sres.ids,
+                             f"{scan_kw} R={R}")
+                assert seg_lut == 0
+                if scan_kw:
+                    assert dense_lut > 0
+                # ragged per-rank gather strictly shrinks the merge buffer on
+                # this skewed workload once ranks stack (R x dense padding)
+                if R >= 4:
+                    assert seg_peak < dense_peak, (R, seg_peak, dense_peak)
+            hqi.cfg.mesh = None
+        print("sharded merge-layout parity OK")
     """)
