@@ -107,7 +107,7 @@ def main() -> None:
     nprobe = 8
 
     # --- global plan: one build_plan over every routed product ---------------
-    tasks, _ = hqi._engine_tasks(wl, nprobe=nprobe, batch_vec=True, stats=ScanStats())
+    tasks, _, _ = hqi._engine_tasks(wl, nprobe=nprobe, batch_vec=True, stats=ScanStats())
     gplan = build_plan(
         hqi.arena, tasks, wl.vectors, m=wl.m, k=wl.k, cfg=hqi.cfg.plan
     )
@@ -119,10 +119,11 @@ def main() -> None:
         ).n_dispatches
 
     # count one explicitly isolated search, then time separately
-    ops.reset_dispatch_stats()
+    before = ops.dispatch_stats().snapshot()
     hqi.search(wl, nprobe=nprobe)
-    dispatches = ops.dispatch_stats().knn_calls
-    shapes = len(ops.dispatch_stats().shapes)
+    d_stats = ops.dispatch_stats().delta_since(before)
+    dispatches = d_stats.knn_calls
+    shapes = len(d_stats.shapes)
     t_search = timed(lambda: hqi.search(wl, nprobe=nprobe), warmup=1, iters=2)
     emit(
         "engine/dispatches_global",

@@ -14,6 +14,12 @@ the serving scenario the offline benchmarks can't measure. Reports:
                              exhaustive search over the final live DB state
                              (exact mode; must be 1.000)
 
+``main_obs`` (suite "obs") measures the observability layer itself:
+tracing-enabled vs -disabled serving passes interleaved A/B/A/B, the
+enabled/disabled overhead ratio (CI gates at 1.05 via check_obs.py), span
+counts, a schema-validated ``trace.json`` export, and the drift monitor's
+reading of a template shift injected at the stream midpoint.
+
 "derived" holds the paper-comparable figure for each row.
 """
 from __future__ import annotations
@@ -129,6 +135,109 @@ def main() -> None:
         for i, h in enumerate(handles)
     )
     emit("service/parity_exact", 0.0, f"{same / n_par:.3f} of {n_par} queries identical")
+
+
+def main_obs() -> None:
+    """Observability overhead + drift detection on a WAL-backed service.
+
+    Interleaves tracing-enabled and -disabled passes (A/B/A/B) over the same
+    service so machine noise hits both arms equally, then reports the
+    enabled/disabled median ratio — the number ci.yml gates at 1.05 via
+    ``benchmarks/check_obs.py``. The enabled pass also exports ``trace.json``
+    (Chrome trace, schema-validated here) and feeds the drift monitor a
+    template shift at the stream midpoint that ``obs/drift_shift`` must see.
+    """
+    import os
+    import tempfile
+    import time
+
+    from repro.obs import trace
+    from repro.obs.metrics import get_registry
+    from repro.store.wal import WriteAheadLog
+
+    n = min(N, 10_000 if FAST else 50_000)
+    kg = kg_style(n=n, d=D, queries_per_split=Q, seed=0)
+    wl = kg.splits[0]
+    hqi = HQIIndex.build(
+        kg.db, wl, HQIConfig(min_partition_size=max(1024, n // 16), max_leaves=32)
+    )
+    # template split for the injected drift: first half of the stream draws
+    # from the low-numbered templates, second half from the high-numbered —
+    # the share shift the drift monitor must report
+    tcut = max(1, len(wl.templates) // 2)
+    rows_a = np.where(wl.template_of < tcut)[0]
+    rows_b = np.where(wl.template_of >= tcut)[0]
+    if len(rows_a) == 0 or len(rows_b) == 0:  # degenerate split: no shift
+        rows_a = rows_b = np.arange(wl.m)
+    tmp = tempfile.mkdtemp(prefix="bench_obs_")
+    wal = WriteAheadLog(os.path.join(tmp, "wal"))
+    svc = HQIService(
+        hqi,
+        ServiceConfig(
+            # batch_vec=True: even smoke-sized flushes go through the engine,
+            # so the trace carries the dispatch.scan/merge.* spans the CI
+            # guard requires (the "auto" crossover would route tiny batches
+            # per-query and trace nothing from the plan executor)
+            k=wl.k, nprobe=8, max_batch=64, deadline_s=0.002, batch_vec=True,
+            # window exactly one pass: at report time the older half is the
+            # rows_a traffic and the recent half rows_b, so the injected
+            # shift isn't washed out by the earlier timing passes
+            drift_window=len(rows_a) + len(rows_b),
+        ),
+        wal=wal,
+    )
+    rng = np.random.default_rng(2)
+    n_new = 50 if FAST else 200
+
+    def stream_half(rows) -> None:
+        for i in rows:
+            svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+        svc.drain()
+
+    def one_pass() -> float:
+        newv = kg.db.vectors[rng.integers(0, kg.db.n, n_new)]
+        t0 = time.perf_counter()
+        stream_half(rows_a)
+        svc.insert(newv)
+        svc.delete(rng.integers(0, kg.db.n, n_new // 2))
+        svc.refresh()
+        stream_half(rows_b)
+        return time.perf_counter() - t0
+
+    one_pass()  # warmup: compile every flush shape before either arm times
+    t_dis, t_en = [], []
+    for _ in range(2 if FAST else 3):
+        trace.disable()
+        t_dis.append(one_pass())
+        trace.enable()  # fresh Tracer per enabled pass (bounded ring)
+        t_en.append(one_pass())
+    m_queries = len(rows_a) + len(rows_b)
+    dis_s = float(np.median(t_dis))
+    en_s = float(np.median(t_en))
+    ratio = en_s / dis_s
+
+    tracer = trace.get_tracer()
+    doc = tracer.to_chrome_trace()
+    n_events = trace.validate_chrome_trace(doc)
+    trace_path = os.path.abspath("trace.json")
+    tracer.export(trace_path)
+    span_names = {e["name"] for e in doc["traceEvents"]}
+    rep = svc.drift_report()
+    reg_keys = sorted(get_registry().snapshot().keys())
+    trace.disable()
+
+    emit("obs/qps_disabled", dis_s / m_queries * 1e6,
+         f"{m_queries / dis_s:.0f} qps, tracing off")
+    emit("obs/qps_enabled", en_s / m_queries * 1e6,
+         f"{m_queries / en_s:.0f} qps, tracing on ({tracer.span_count} spans)")
+    emit("obs/overhead_ratio", ratio,
+         f"{ratio:.3f}x enabled/disabled (gate: 1.05)")
+    emit("obs/trace_events", float(n_events),
+         f"{n_events} events, {len(span_names)} distinct names -> {trace_path}")
+    emit("obs/drift_shift", rep.share_shift,
+         f"TV distance {rep.share_shift:.3f} across injected template shift "
+         f"({rep.n_window} queries windowed)")
+    emit("obs/registry", 0.0, f"{len(reg_keys)} entries: {' '.join(reg_keys)}")
 
 
 if __name__ == "__main__":

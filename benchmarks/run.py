@@ -13,7 +13,7 @@ pq-vs-f32 bytes/recall, serving throughput) is tracked across PRs.
 import os
 import sys
 
-SMOKE_SUITES = ["engine", "kernels", "service", "distributed", "store"]
+SMOKE_SUITES = ["engine", "kernels", "service", "distributed", "store", "obs"]
 
 
 def main() -> None:
@@ -40,6 +40,7 @@ def main() -> None:
         "service": bench_service.main,
         "distributed": bench_distributed.main,
         "store": bench_store.main,
+        "obs": bench_service.main_obs,
     }
     picks = args or list(suites)
     print("name,us_per_call,derived")

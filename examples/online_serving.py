@@ -124,4 +124,26 @@ assert np.array_equal(before_ids, h.ids) and np.array_equal(before_scores, h.sco
 print(f"recovered from {root}: acknowledged insert {int(acked[0])} survived "
       f"the crash; answers bit-identical to the uncrashed service")
 shutil.rmtree(root)
+
+# 8) observability: re-run a traced burst and export a Perfetto-loadable
+#    timeline — submit markers, per-query queue waits, flush/dispatch/merge
+#    spans — plus the unified metrics snapshot and a workload-drift reading
+from repro.obs import trace
+from repro.obs.metrics import get_registry
+
+tracer = trace.enable()  # tracing is off by default and costs nothing until now
+handles = [
+    svc.submit(vectors[int(e)] + 0.05 * rng.normal(size=d).astype(np.float32),
+               person_with_height if e % 2 == 0 else any_song)
+    for e in rng.integers(0, n, 64)
+]
+svc.drain()
+trace_path = tracer.export("trace.json")
+trace.disable()
+snap = get_registry().snapshot()
+rep = svc.drift_report()
+print(f"traced {tracer.span_count} spans -> {trace_path} "
+      f"(open in https://ui.perfetto.dev); "
+      f"queue-wait p50 {snap['service.queue_wait_s']['p50']*1e3:.2f} ms; "
+      f"drift share_shift {rep.share_shift:.2f} over {rep.n_window} queries")
 print("OK")

@@ -44,6 +44,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from ..obs.trace import get_tracer
 from . import kmeans as km
 from .arena import PackedArena
 from .ivf import IVFIndex, ScanStats
@@ -287,13 +288,15 @@ class HQIIndex:
         batch_vec: Union[bool, str],
         stats: ScanStats,
         live_mask: Optional[np.ndarray] = None,
-    ) -> Tuple[List[EngineTask], List[ExtraCandidates]]:
+    ) -> Tuple[List[EngineTask], List[ExtraCandidates], Dict[int, int]]:
         """Route the workload into engine tasks + host-side per-query scans.
 
         Every routed (template × partition) product with a non-empty bitmap
         either joins the global plan (``EngineTask``) or — when the adaptive
         executor deems the group too small to amortize padding — runs as
         per-query scans whose top-ks are returned as extra merge candidates.
+        The third return is the probe-heat map {partition: #queries routed
+        there} across both paths (the drift monitor's per-partition feed).
 
         ``live_mask`` (bool [db.n]) is the serving layer's tombstone filter:
         it is ANDed into every template bitmap *after* the cache lookup, so
@@ -302,6 +305,7 @@ class HQIIndex:
         troutes, qcent_ok = self.router.routes(workload)
         tasks: List[EngineTask] = []
         extra: List[ExtraCandidates] = []
+        part_probes: Dict[int, int] = {}
         k = workload.k
         for ti, filt in enumerate(workload.templates):
             q_of_t = workload.queries_for_template(ti)
@@ -321,6 +325,8 @@ class HQIIndex:
                 local_bitmap = bitmap[part.rows]
                 if not local_bitmap.any():
                     continue
+                li_key = int(li)
+                part_probes[li_key] = part_probes.get(li_key, 0) + len(qidx)
                 use_batch = (
                     len(qidx) >= self.cfg.plan.adaptive_crossover
                     if batch_vec == "auto"
@@ -345,7 +351,7 @@ class HQIIndex:
                     )
                     gids = np.where(loc >= 0, part.rows[np.maximum(loc, 0)], -1)
                     extra.append((qidx.astype(np.int64), s, gids))
-        return tasks, extra
+        return tasks, extra, part_probes
 
     def search(
         self,
@@ -369,37 +375,44 @@ class HQIIndex:
         """
         m, k = workload.m, workload.k
         stats = ScanStats()
-        tasks, extra = self._engine_tasks(
-            workload, nprobe=nprobe, batch_vec=batch_vec, stats=stats,
-            live_mask=live_mask,
-        )
+        tracer = get_tracer()
+        with tracer.span("engine.route", m=m, templates=len(workload.templates)):
+            tasks, extra, part_probes = self._engine_tasks(
+                workload, nprobe=nprobe, batch_vec=batch_vec, stats=stats,
+                live_mask=live_mask,
+            )
         shard_stats = None
         if tasks and self.cfg.mesh is not None:
             # sharded engine: same tasks, same routing, device-mesh execution
             from .distributed import ShardSpec, execute_sharded
 
             spec = self.cfg.shard_spec or ShardSpec()
-            run_s, run_i, shard_stats = execute_sharded(
-                self.sharded_arena(spec.n_shards(self.cfg.mesh)),
-                tasks,
-                workload.vectors,
-                mesh=self.cfg.mesh,
-                spec=spec,
-                m=m,
-                k=k,
-                cfg=self.cfg.plan,
-                extra=extra,
-                stats=stats,
-            )
+            with tracer.span("plan.execute", mode="sharded", tasks=len(tasks)):
+                run_s, run_i, shard_stats = execute_sharded(
+                    self.sharded_arena(spec.n_shards(self.cfg.mesh)),
+                    tasks,
+                    workload.vectors,
+                    mesh=self.cfg.mesh,
+                    spec=spec,
+                    m=m,
+                    k=k,
+                    cfg=self.cfg.plan,
+                    extra=extra,
+                    stats=stats,
+                )
         else:
             # the all-per-query path (batch_vec=False) never touches the arena
             arena = self.arena if tasks else None
-            plan = build_plan(
-                arena, tasks, workload.vectors, m=m, k=k, cfg=self.cfg.plan, stats=stats
-            )
-            run_s, run_i = execute_plan(
-                plan, arena, workload.vectors, cfg=self.cfg.plan, extra=extra, stats=stats
-            )
+            with tracer.span("plan.build", tasks=len(tasks)):
+                plan = build_plan(
+                    arena, tasks, workload.vectors, m=m, k=k, cfg=self.cfg.plan, stats=stats
+                )
+            with tracer.span(
+                "plan.execute", buckets=len(plan.buckets), extras=len(extra)
+            ):
+                run_s, run_i = execute_plan(
+                    plan, arena, workload.vectors, cfg=self.cfg.plan, extra=extra, stats=stats
+                )
         return SearchResult(
             ids=run_i,
             scores=run_s,
@@ -408,6 +421,7 @@ class HQIIndex:
             peak_candidate_bytes=stats.peak_candidate_bytes,
             lut_bytes=stats.lut_bytes,
             shard_stats=shard_stats,
+            part_probes=part_probes,
         )
 
     # ------------------------------------------------------------ online search

@@ -74,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from ..obs.trace import fence, get_tracer
 from .arena import PackedArena, ShardedArena
 from .ivf import IVFIndex, ScanStats
 from .plan import (
@@ -240,15 +241,17 @@ def _iter_f32_buckets(plan, arena, q_vecs, cfg, stats):
             # comparable across configurations — the sharded executor counts
             # the same way per rank
             stats.bytes_scanned += len(units) * lp * d * 4
-        s, i_loc = kops.workunit_topk(
-            jnp.asarray(Q),
-            jnp.asarray(V),
-            jnp.asarray(valid),
-            min(k, lp),
-            metric=arena.metric,
-            use_pallas=cfg.use_pallas,
-            interpret=cfg.interpret,
-        )
+        with get_tracer().span("dispatch.scan", mode="f32", lp=lp, units=len(units)):
+            s, i_loc = kops.workunit_topk(
+                jnp.asarray(Q),
+                jnp.asarray(V),
+                jnp.asarray(valid),
+                min(k, lp),
+                metric=arena.metric,
+                use_pallas=cfg.use_pallas,
+                interpret=cfg.interpret,
+            )
+            s, i_loc = fence(s, i_loc)  # device time is real iff tracing is on
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)  # index within the unit's lp rows (-1 = none)
         kk = s.shape[-1]
@@ -315,9 +318,11 @@ def _execute_plan_f32_segmented(
         flat_s[rows, :kk] = es[:, :kk]
         flat_i[rows, :kk] = ei[:, :kk]
 
-    top_s, top_i = kops.segmented_merge_topk(
-        jnp.asarray(flat_s), jnp.asarray(flat_i), jnp.asarray(seg_of), m, k
-    )
+    with get_tracer().span("merge.segmented", m=m, candidates=C_total):
+        top_s, top_i = kops.segmented_merge_topk(
+            jnp.asarray(flat_s), jnp.asarray(flat_i), jnp.asarray(seg_of), m, k
+        )
+        top_s, top_i = fence(top_s, top_i)
     return np.asarray(top_s, dtype=np.float32), np.asarray(top_i, dtype=np.int64)
 
 
@@ -363,7 +368,9 @@ def _padded_merge(
         padc = width - flat_s.shape[1]
         flat_s = np.pad(flat_s, ((0, 0), (0, padc)), constant_values=-np.inf)
         flat_i = np.pad(flat_i, ((0, 0), (0, padc)), constant_values=-1)
-    return kops.merge_topk(jnp.asarray(flat_s), jnp.asarray(flat_i), k)
+    with get_tracer().span("merge.final", m=flat_s.shape[0], width=width):
+        s, i = kops.merge_topk(jnp.asarray(flat_s), jnp.asarray(flat_i), k)
+        return fence(s, i)
 
 
 def _execute_plan_pq(
@@ -451,14 +458,16 @@ def _pq_stage_a_dense(
         if stats is not None:
             stats.bytes_scanned += len(units) * lp * arena.codes.shape[1]
         kk = min(kprime, lp)
-        s, i_loc = kops.workunit_pq_topk(
-            jnp.asarray(luts),
-            jnp.asarray(codes),
-            jnp.asarray(valid),
-            kk,
-            use_pallas=cfg.use_pallas,
-            interpret=cfg.interpret,
-        )
+        with get_tracer().span("dispatch.scan", mode="pq", lp=lp, units=len(units)):
+            s, i_loc = kops.workunit_pq_topk(
+                jnp.asarray(luts),
+                jnp.asarray(codes),
+                jnp.asarray(valid),
+                kk,
+                use_pallas=cfg.use_pallas,
+                interpret=cfg.interpret,
+            )
+            s, i_loc = fence(s, i_loc)
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)  # [W, tq, kk] index into the unit's lp rows
         packed_rows = np.take_along_axis(
@@ -517,15 +526,17 @@ def _pq_stage_a_segmented(
         if stats is not None:
             stats.bytes_scanned += len(units) * lp * arena.codes.shape[1]
         kk = min(kprime, lp)
-        s, i_loc = kops.workunit_pq_topk_resident(
-            luts_dev,
-            jnp.asarray(lut_idx),
-            jnp.asarray(codes),
-            jnp.asarray(valid),
-            kk,
-            use_pallas=cfg.use_pallas,
-            interpret=cfg.interpret,
-        )
+        with get_tracer().span("dispatch.scan", mode="pq-res", lp=lp, units=len(units)):
+            s, i_loc = kops.workunit_pq_topk_resident(
+                luts_dev,
+                jnp.asarray(lut_idx),
+                jnp.asarray(codes),
+                jnp.asarray(valid),
+                kk,
+                use_pallas=cfg.use_pallas,
+                interpret=cfg.interpret,
+            )
+            s, i_loc = fence(s, i_loc)
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)
         packed_rows = np.take_along_axis(
@@ -539,9 +550,11 @@ def _pq_stage_a_segmented(
         flat_s[rows_f, :kk] = s[wmask]
         flat_rows[rows_f, :kk] = packed_rows[wmask]
 
-    _, top_rows = kops.segmented_merge_topk(
-        jnp.asarray(flat_s), jnp.asarray(flat_rows), jnp.asarray(seg_of), m, kprime
-    )
+    with get_tracer().span("merge.segmented", m=m, candidates=C_total):
+        _, top_rows = kops.segmented_merge_topk(
+            jnp.asarray(flat_s), jnp.asarray(flat_rows), jnp.asarray(seg_of), m, kprime
+        )
+        top_rows = fence(top_rows)
     return np.asarray(top_rows, dtype=np.int64)
 
 
@@ -572,15 +585,17 @@ def _pq_rerank_and_fold(
     if stats is not None:
         # real surviving candidates only (matches the sharded re-rank)
         stats.bytes_scanned += int((rows >= 0).sum()) * d * 4
-    s, i_loc = kops.workunit_topk(
-        jnp.asarray(Qr),
-        jnp.asarray(Vr),
-        jnp.asarray(valid_r),
-        min(k, kprime),
-        metric=arena.metric,
-        use_pallas=cfg.use_pallas,
-        interpret=cfg.interpret,
-    )
+    with get_tracer().span("rerank.exact", m=m, kprime=kprime):
+        s, i_loc = kops.workunit_topk(
+            jnp.asarray(Qr),
+            jnp.asarray(Vr),
+            jnp.asarray(valid_r),
+            min(k, kprime),
+            metric=arena.metric,
+            use_pallas=cfg.use_pallas,
+            interpret=cfg.interpret,
+        )
+        s, i_loc = fence(s, i_loc)
     s = np.asarray(s)[:m, 0]  # [m, kk] exact scores
     i_loc = np.asarray(i_loc)[:m, 0]  # [m, kk] index into the k' candidates
     kk = s.shape[-1]
@@ -777,9 +792,11 @@ def _gather_merge(
         padc = width - flat_s.shape[2]
         flat_s = np.pad(flat_s, ((0, 0), (0, 0), (0, padc)), constant_values=-np.inf)
         flat_i = np.pad(flat_i, ((0, 0), (0, 0), (0, padc)), constant_values=-1)
-    ms, mi = kops.sharded_merge_topk(
-        mesh, axis, jnp.asarray(flat_s), jnp.asarray(flat_i), k
-    )
+    with get_tracer().span("merge.gather", ranks=R, m=m, width=width):
+        ms, mi = kops.sharded_merge_topk(
+            mesh, axis, jnp.asarray(flat_s), jnp.asarray(flat_i), k
+        )
+        ms, mi = fence(ms, mi)
     return np.asarray(ms, dtype=np.float32), np.asarray(mi, dtype=np.int64)
 
 
@@ -865,12 +882,17 @@ def _execute_sharded_f32(
         if stats is not None:
             stats.bytes_scanned += int(sum(len(u) for u in unit_lists)) * lp * d * 4
         kk = min(k, lp)
-        s, i_loc = kops.sharded_workunit_topk(
-            mesh, axis,
-            jnp.asarray(Q), jnp.asarray(V), jnp.asarray(valid), kk,
-            metric=arena.metric,
-            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
-        )
+        with get_tracer().span(
+            "dispatch.sharded", mode="f32", lp=lp,
+            rank_units=[len(u) for u in unit_lists],
+        ):
+            s, i_loc = kops.sharded_workunit_topk(
+                mesh, axis,
+                jnp.asarray(Q), jnp.asarray(V), jnp.asarray(valid), kk,
+                metric=arena.metric,
+                use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+            )
+            s, i_loc = fence(s, i_loc)
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)  # [R, W, tq, kk] index into the unit's lp rows
         for r in range(R):
@@ -896,9 +918,11 @@ def _execute_sharded_f32(
         # one ragged merge over R·m segments = every rank's local top-k; the
         # gather merge's rank-local reduction over these already-sorted rows
         # is an identity, so the all-gather sees the dense path's operands
-        seg_s, seg_i = kops.segmented_merge_topk(
-            jnp.asarray(flat_s), jnp.asarray(flat_i), jnp.asarray(seg_of), R * m, k
-        )
+        with get_tracer().span("merge.segmented", m=R * m, candidates=int(base[-1])):
+            seg_s, seg_i = kops.segmented_merge_topk(
+                jnp.asarray(flat_s), jnp.asarray(flat_i), jnp.asarray(seg_of), R * m, k
+            )
+            seg_s, seg_i = fence(seg_s, seg_i)
         ms, mi = _gather_merge(
             mesh, axis,
             np.asarray(seg_s, dtype=np.float32).reshape(R, m, 1, k),
@@ -982,6 +1006,7 @@ def _execute_sharded_pq(
             stats.bytes_scanned += int(sum(len(u) for u in unit_lists)) * lp * M
         lut_idx = lut_pos[np.maximum(qrow_of, 0)]  # padding slots -> LUT row 0
         kk = min(kprime, lp)
+        rank_units = [len(u) for u in unit_lists]
         if not segmented:
             # the dense dispatch expands per-unit [W, tq, M, 256] LUT operands
             # on every rank; the segmented (stream=True) dispatch indexes the
@@ -991,12 +1016,16 @@ def _execute_sharded_pq(
             _account_lut(
                 stats, R * W * tq * M * 256 * 4, expanded=True
             )
-        s, i_loc = kops.sharded_workunit_pq_topk(
-            mesh, axis,
-            luts_dev, jnp.asarray(lut_idx), jnp.asarray(codes), jnp.asarray(valid), kk,
-            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
-            stream=segmented,
-        )
+        with get_tracer().span(
+            "dispatch.sharded", mode="pq", lp=lp, rank_units=rank_units
+        ):
+            s, i_loc = kops.sharded_workunit_pq_topk(
+                mesh, axis,
+                luts_dev, jnp.asarray(lut_idx), jnp.asarray(codes), jnp.asarray(valid), kk,
+                use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+                stream=segmented,
+            )
+            s, i_loc = fence(s, i_loc)
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)
         for r in range(R):
@@ -1020,10 +1049,12 @@ def _execute_sharded_pq(
     # global top-k' ADC candidates: k'·|model| gather, identical selection to
     # the single-device merge (a global survivor survives locally too)
     if segmented:
-        seg_s, seg_i = kops.segmented_merge_topk(
-            jnp.asarray(flat_s), jnp.asarray(flat_rows), jnp.asarray(seg_of),
-            R * m, kprime,
-        )
+        with get_tracer().span("merge.segmented", m=R * m, candidates=int(base[-1])):
+            seg_s, seg_i = kops.segmented_merge_topk(
+                jnp.asarray(flat_s), jnp.asarray(flat_rows), jnp.asarray(seg_of),
+                R * m, kprime,
+            )
+            seg_s, seg_i = fence(seg_s, seg_i)
         _, top_rows = _gather_merge(
             mesh, axis,
             np.asarray(seg_s, dtype=np.float32).reshape(R, m, 1, kprime),
@@ -1054,12 +1085,14 @@ def _execute_sharded_pq(
         if stats is not None:
             stats.bytes_scanned += sel.nbytes
     kk = min(k, kprime)
-    s, i_loc = kops.sharded_workunit_topk(
-        mesh, axis,
-        jnp.asarray(Qr), jnp.asarray(Vr), jnp.asarray(valid_r), kk,
-        metric=arena.metric,
-        use_pallas=cfg.use_pallas, interpret=cfg.interpret,
-    )
+    with get_tracer().span("rerank.exact", mode="sharded", m=m, kprime=kprime):
+        s, i_loc = kops.sharded_workunit_topk(
+            mesh, axis,
+            jnp.asarray(Qr), jnp.asarray(Vr), jnp.asarray(valid_r), kk,
+            metric=arena.metric,
+            use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+        )
+        s, i_loc = fence(s, i_loc)
     s = np.asarray(s)[:, :m, 0]  # [R, m, kk] exact partial scores
     i_loc = np.asarray(i_loc)[:, :m, 0]  # [R, m, kk] index into the k' candidates
     rows_b = np.broadcast_to(rows[None], (R, m, kprime))

@@ -270,6 +270,9 @@ class SearchResult:
     # per-rank accounting when the search ran on a device mesh
     # (core.planner.ShardStats; annotated loosely so types stays import-light)
     shard_stats: Optional[object] = None
+    # partition id -> number of queries the router sent there (engine tasks
+    # plus adaptive per-query scans) — the drift monitor's probe-heat feed
+    part_probes: Optional[Dict[int, int]] = None
 
     @property
     def k(self) -> int:

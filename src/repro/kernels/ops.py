@@ -98,6 +98,22 @@ class DispatchStats:
                 lut_expand_bytes=self.lut_expand_bytes,
             )
 
+    def delta_since(self, prev: "DispatchStats") -> "DispatchStats":
+        """What happened between two snapshots: ``after.delta_since(before)``.
+
+        Running counters subtract; ``shapes`` is the set of shapes first seen
+        in the interval; ``peak_candidate_bytes`` is a lifetime high-water
+        mark, not a rate, so the delta carries the current value unchanged.
+        """
+        a, b = self.snapshot(), prev
+        return DispatchStats(
+            knn_calls=a.knn_calls - b.knn_calls,
+            merge_calls=a.merge_calls - b.merge_calls,
+            shapes=a.shapes - b.shapes,
+            peak_candidate_bytes=a.peak_candidate_bytes,
+            lut_expand_bytes=a.lut_expand_bytes - b.lut_expand_bytes,
+        )
+
 
 _DISPATCH = DispatchStats()
 

@@ -1,0 +1,97 @@
+"""Observability dump: trace + metrics + drift report from a live stream.
+
+    PYTHONPATH=src python -m repro.launch.obsdump --n 5000 --queries 200
+    PYTHONPATH=src python -m repro.launch.obsdump --trace-out trace.json \
+        --probe-recall
+
+Builds a small KG-style service, enables tracing, streams the query log with
+a template shift injected at the midpoint (plus one insert/delete +
+``refresh()`` cycle), then prints the unified metrics snapshot and the
+drift monitor's report and exports the Chrome-trace JSON — open it at
+https://ui.perfetto.dev to see submit → queue wait → flush → dispatch →
+merge → WAL spans per query.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from ..core import HQIConfig, HQIIndex
+from ..core.workload import kg_style
+from ..obs import trace
+from ..obs.metrics import get_registry
+from ..service import HQIService, ServiceConfig
+from ..store.wal import WriteAheadLog
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=5000, help="database rows")
+    ap.add_argument("--d", type=int, default=16, help="vector dims")
+    ap.add_argument("--queries", type=int, default=200, help="stream length")
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--trace-out", default="trace.json")
+    ap.add_argument("--probe-recall", action="store_true",
+                    help="replay the answered-query reservoir against a "
+                         "brute-force scan (exact recall@k; O(n) per sample)")
+    args = ap.parse_args()
+
+    kg = kg_style(n=args.n, d=args.d, queries_per_split=args.queries, seed=0)
+    wl = kg.splits[0]
+    hqi = HQIIndex.build(
+        kg.db, wl,
+        HQIConfig(min_partition_size=max(128, args.n // 16), max_leaves=32),
+    )
+    tmp = tempfile.mkdtemp(prefix="obsdump_")
+    svc = HQIService(
+        hqi,
+        ServiceConfig(k=wl.k, nprobe=args.nprobe, max_batch=args.max_batch,
+                      deadline_s=0.002),
+        wal=WriteAheadLog(os.path.join(tmp, "wal")),
+    )
+
+    tracer = trace.enable()
+
+    # first half draws low-numbered templates, second half high-numbered:
+    # the share shift the drift report should flag
+    tcut = max(1, len(wl.templates) // 2)
+    rows_a = np.where(wl.template_of < tcut)[0]
+    rows_b = np.where(wl.template_of >= tcut)[0]
+    if len(rows_a) == 0 or len(rows_b) == 0:
+        rows_a, rows_b = np.arange(wl.m), np.arange(wl.m)
+
+    for i in rows_a:
+        svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+    svc.drain()
+
+    rng = np.random.default_rng(1)
+    n_new = max(8, args.n // 100)
+    svc.insert(kg.db.vectors[rng.integers(0, kg.db.n, n_new)])
+    svc.delete(rng.integers(0, kg.db.n, n_new // 2))
+    svc.refresh()
+
+    for i in rows_b:
+        svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+    svc.drain()
+
+    print("== metrics ==")
+    print(get_registry().to_json(indent=2))
+
+    rep = svc.drift_report(probe_recall=args.probe_recall)
+    print("== drift ==")
+    print(json.dumps(json.loads(rep.to_json()), indent=2))
+
+    path = tracer.export(args.trace_out)
+    n_events = trace.validate_chrome_trace(tracer.to_chrome_trace())
+    trace.disable()
+    print(f"== trace ==\n{n_events} events ({tracer.span_count} spans) "
+          f"-> {path}  (open in https://ui.perfetto.dev)")
+
+
+if __name__ == "__main__":
+    main()

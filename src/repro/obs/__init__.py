@@ -1,0 +1,54 @@
+"""repro.obs — unified observability: tracing, metrics, drift monitoring.
+
+Three pillars, one import surface:
+
+  * ``obs.trace`` — process-wide span tracer exporting Chrome-trace JSON
+    (Perfetto-loadable); disabled by default via a free ``NullTracer``.
+  * ``obs.metrics`` — counters/gauges/bounded-histograms registry unifying
+    the layers' ad-hoc stats behind one ``snapshot()``/``to_json()``.
+  * ``obs.drift`` — sliding-window workload monitor emitting the
+    ``DriftReport`` the hot-swap index tuner consumes.
+
+This package is imported by hot serving paths — keep it stdlib-light at
+module level (numpy only); anything heavy (jax, the engine) loads lazily
+inside functions.
+"""
+from .drift import DriftConfig, DriftMonitor, DriftReport
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    set_registry,
+)
+from .trace import (
+    NullTracer,
+    Tracer,
+    disable,
+    enable,
+    fence,
+    get_tracer,
+    set_tracer,
+    validate_chrome_trace,
+)
+
+__all__ = [
+    "DriftConfig",
+    "DriftMonitor",
+    "DriftReport",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "get_registry",
+    "set_registry",
+    "NullTracer",
+    "Tracer",
+    "disable",
+    "enable",
+    "fence",
+    "get_tracer",
+    "set_tracer",
+    "validate_chrome_trace",
+]

@@ -30,6 +30,8 @@ import numpy as np
 
 from ..core.plan import _next_pow2
 from ..core.types import HybridQuery, Workload
+from ..obs.metrics import get_registry
+from ..obs.trace import get_tracer
 
 
 @dataclasses.dataclass
@@ -81,7 +83,9 @@ class MicroBatchScheduler:
     def take(self) -> List[PendingQuery]:
         """Pop the next flush (up to ``max_batch`` queries, FIFO order)."""
         n = min(len(self._pending), self.max_batch)
-        return [self._pending.popleft() for _ in range(n)]
+        batch = [self._pending.popleft() for _ in range(n)]
+        get_registry().gauge("service.queue_depth").set(len(self._pending))
+        return batch
 
     def build_workload(self, batch: List[PendingQuery], k: int) -> Tuple[Workload, int]:
         """(synthetic Workload, n_real): flush → engine input.
@@ -91,9 +95,10 @@ class MicroBatchScheduler:
         """
         assert batch, "empty flush"
         m = len(batch)
-        wl = Workload.from_queries(
-            [HybridQuery(vector=pq.vector, filter=pq.filt) for pq in batch], k=k
-        )
+        with get_tracer().span("flush.build", size=m):
+            wl = Workload.from_queries(
+                [HybridQuery(vector=pq.vector, filter=pq.filt) for pq in batch], k=k
+            )
         if self.pad_pow2:
             slots = _next_pow2(m, 1)
             if slots > m:

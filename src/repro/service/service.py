@@ -52,6 +52,9 @@ from ..core.hqi import HQIIndex
 from ..core.ivf import ScanStats
 from ..core.types import VectorDatabase, Workload
 from ..kernels import ops as kops
+from ..obs.drift import DriftConfig, DriftMonitor, DriftReport
+from ..obs.metrics import get_registry
+from ..obs.trace import fence, get_tracer
 from .delta import DeltaStore
 from .scheduler import MicroBatchScheduler, PendingQuery
 from .telemetry import ServiceTelemetry
@@ -76,6 +79,10 @@ class ServiceConfig:
     # of brute-forcing f32 rows; None disables. Buffers at or under the
     # threshold always scan exact.
     delta_pq_threshold: Optional[int] = 4096
+    # workload-drift monitor (obs.drift): sliding window of answered-query
+    # templates and reservoir size for the live recall probe
+    drift_window: int = 4096
+    recall_reservoir: int = 64
 
 
 @dataclasses.dataclass
@@ -154,6 +161,17 @@ class HQIService:
             pq=index.pq if self.cfg.delta_pq_threshold is not None else None,
         )
         self.telemetry = ServiceTelemetry()
+        # workload observer feeding the future hot-swap tuner; fed by _flush,
+        # read via drift_report()
+        self.drift = DriftMonitor(
+            DriftConfig(
+                window=self.cfg.drift_window, reservoir=self.cfg.recall_reservoir
+            )
+        )
+        # fold this service's telemetry into the process metrics registry
+        # (latest service wins the "service" slot — one serving process is
+        # the deployment unit)
+        get_registry().attach_source("service", self.telemetry.summary)
         self._live = np.ones(index.db.n, dtype=bool)  # tombstones over indexed rows
         # state lock for scheduler + delta + live-mask: writers and the flush
         # snapshot take it BRIEFLY — kernel dispatch happens outside it, so
@@ -188,6 +206,9 @@ class HQIService:
                     t_submit=now,
                 )
             )
+        tracer = get_tracer()
+        if tracer.enabled:  # hottest path: skip even the no-op kwargs build
+            tracer.instant("submit", qid=h.qid)
         return h
 
     def insert(
@@ -208,27 +229,29 @@ class HQIService:
         invariant recovery's replay asserts — then blocks on
         ``wal.sync_upto`` outside it, and applies in ticket (= seq) order.
         """
-        if self.wal is None:
+        with get_tracer().span("service.insert"):
+            if self.wal is None:
+                with self._lock:
+                    slab, ids = self.delta.prepare_insert(vectors, columns, null_masks)
+                    self.delta.commit_insert(slab, ids)
+                return ids
             with self._lock:
                 slab, ids = self.delta.prepare_insert(vectors, columns, null_masks)
-                self.delta.commit_insert(slab, ids)
+                seq = self.wal.stage_insert(slab.vectors, ids, columns, null_masks)
+                ticket = self._commit_tail
+                self._commit_tail += 1
+            try:
+                self.wal.sync_upto(seq)
+            finally:
+                # apply even when the fsync failed: the frame is in the log (a
+                # replay would re-apply it) and later tickets' id-ordered
+                # commits depend on this slab's rows being in place; the
+                # caller still sees the durability error because the
+                # exception propagates
+                self._commit_in_order(
+                    ticket, seq, lambda: self.delta.commit_insert(slab, ids)
+                )
             return ids
-        with self._lock:
-            slab, ids = self.delta.prepare_insert(vectors, columns, null_masks)
-            seq = self.wal.stage_insert(slab.vectors, ids, columns, null_masks)
-            ticket = self._commit_tail
-            self._commit_tail += 1
-        try:
-            self.wal.sync_upto(seq)
-        finally:
-            # apply even when the fsync failed: the frame is in the log (a
-            # replay would re-apply it) and later tickets' id-ordered commits
-            # depend on this slab's rows being in place; the caller still
-            # sees the durability error because the exception propagates
-            self._commit_in_order(
-                ticket, seq, lambda: self.delta.commit_insert(slab, ids)
-            )
-        return ids
 
     def delete(self, ids: Iterable[int]) -> int:
         """Tombstone tuples by global id; visible to the next flush.
@@ -240,18 +263,21 @@ class HQIService:
         order a recovery replay reproduces.
         """
         ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
-        if self.wal is None:
+        with get_tracer().span("service.delete"):
+            if self.wal is None:
+                with self._lock:
+                    return self._delete_locked(ids)
             with self._lock:
-                return self._delete_locked(ids)
-        with self._lock:
-            seq = self.wal.stage_delete(ids)
-            ticket = self._commit_tail
-            self._commit_tail += 1
-        try:
-            self.wal.sync_upto(seq)
-        finally:
-            n = self._commit_in_order(ticket, seq, lambda: self._delete_locked(ids))
-        return n
+                seq = self.wal.stage_delete(ids)
+                ticket = self._commit_tail
+                self._commit_tail += 1
+            try:
+                self.wal.sync_upto(seq)
+            finally:
+                n = self._commit_in_order(
+                    ticket, seq, lambda: self._delete_locked(ids)
+                )
+            return n
 
     def _commit_in_order(self, ticket: int, seq: int, apply_fn):
         """Run a staged write's apply step when its ticket comes up.
@@ -316,7 +342,7 @@ class HQIService:
         (``rotate``) — folded records are covered by the next snapshot, so
         compaction can prune whole sealed segments.
         """
-        with self._flush_lock:
+        with self._flush_lock, get_tracer().span("service.refresh"):
             return self._refresh_locked()
 
     def _refresh_locked(self) -> int:
@@ -383,6 +409,7 @@ class HQIService:
         that queued behind another flush doesn't prematurely flush queries
         that arrived meanwhile and are still inside the batching window.
         """
+        tracer = get_tracer()
         with self._flush_lock:
             with self._lock:
                 if ready_only and not self.scheduler.ready(now):
@@ -394,28 +421,69 @@ class HQIService:
                 wl, n_real = self.scheduler.build_workload(batch, self.cfg.k)
                 live = self._live.copy()
                 delta_view = self.delta.view()
+                delta_rows = self.delta.n
+            if tracer.enabled:
+                # retroactive per-query queue-wait spans: t_submit and the
+                # tracer share the perf_counter clock, so submit→flush waits
+                # land exactly on the timeline even though they are only
+                # known now
+                t_start = time.perf_counter()
+                for pq in batch:
+                    tracer.add_span(
+                        "queue.wait", pq.t_submit, t_start, qid=pq.handle.qid
+                    )
+                tracer.counter("queue.depth", depth)
             before = kops.dispatch_stats().snapshot()
             t0 = time.perf_counter()
-            ids, scores, res = self._answer(wl, live, delta_view)
+            with tracer.span("flush", size=n_real, depth=depth):
+                ids, scores, res = self._answer(wl, live, delta_view)
             dt = time.perf_counter() - t0
-            after = kops.dispatch_stats().snapshot()
+            delta_stats = kops.dispatch_stats().delta_since(before)
             t_done = time.perf_counter()
             with self._lock:
                 lats = []
-                for i, pq in enumerate(batch):
-                    pq.handle._fulfill(ids[i], scores[i], t_done)
-                    lats.append(t_done - pq.t_submit)
+                with tracer.span("flush.fulfill", size=n_real):
+                    for i, pq in enumerate(batch):
+                        pq.handle._fulfill(ids[i], scores[i], t_done)
+                        lats.append(t_done - pq.t_submit)
                 self.telemetry.record_flush(
                     size=n_real,
                     queue_depth=depth,
-                    knn_dispatches=after.knn_calls - before.knn_calls,
-                    merge_dispatches=after.merge_calls - before.merge_calls,
+                    knn_dispatches=delta_stats.knn_calls,
+                    merge_dispatches=delta_stats.merge_calls,
                     seconds=dt,
                     latencies=lats,
                     peak_candidate_bytes=res.peak_candidate_bytes,
                     lut_bytes=res.lut_bytes,
                 )
+            self._observe_flush(batch, ids, lats, res, delta_rows)
         return n_real
+
+    def _observe_flush(self, batch, ids, lats, res, delta_rows: int) -> None:
+        """Feed the metrics registry and drift monitor from one flush (runs
+        outside the state lock — every input is a flush-local snapshot)."""
+        reg = get_registry()
+        qw = reg.histogram("service.queue_wait_s")
+        for w in lats:
+            qw.observe(w)
+        reg.histogram("service.flush_size").observe(len(batch))
+        reg.histogram("engine.bytes_scanned").observe(res.bytes_scanned)
+        reg.histogram("engine.peak_candidate_bytes").observe(res.peak_candidate_bytes)
+        self.drift.observe_queries([pq.filt for pq in batch])
+        if res.part_probes:
+            self.drift.observe_probes(res.part_probes)
+        self.drift.observe_delta(delta_rows)
+        for i, pq in enumerate(batch):
+            self.drift.maybe_sample(pq.vector, pq.filt, ids[i])
+
+    def drift_report(
+        self, *, probe_recall: bool = False, k: Optional[int] = None
+    ) -> DriftReport:
+        """Current workload-drift reading (see obs.drift). ``probe_recall``
+        additionally replays the answered-query reservoir against a
+        brute-force scan of the live DB — exact but O(n), so keep it off
+        latency-sensitive paths."""
+        return self.drift.report(self, probe_recall=probe_recall, k=k)
 
     def _answer(self, wl: Workload, live: np.ndarray, delta_view):
         """(ids i64 [m, k], scores f32 [m, k], SearchResult): engine + delta.
@@ -425,24 +493,29 @@ class HQIService:
         ``SearchResult`` rides along for the flush's telemetry (candidate
         buffer peak, LUT bytes).
         """
-        res = self.index.search(
-            wl,
-            nprobe=self.cfg.nprobe,
-            batch_vec=self.cfg.batch_vec,
-            live_mask=live,
-        )
-        delta_out = delta_view.scan(
-            wl,
-            stats=ScanStats(),
-            pq_threshold=self.cfg.delta_pq_threshold,
-            refine_factor=self.index.cfg.plan.refine_factor,
-        )
+        tracer = get_tracer()
+        with tracer.span("engine.search", m=wl.m):
+            res = self.index.search(
+                wl,
+                nprobe=self.cfg.nprobe,
+                batch_vec=self.cfg.batch_vec,
+                live_mask=live,
+            )
+        with tracer.span("delta.scan", rows=len(delta_view.live)):
+            delta_out = delta_view.scan(
+                wl,
+                stats=ScanStats(),
+                pq_threshold=self.cfg.delta_pq_threshold,
+                refine_factor=self.index.cfg.plan.refine_factor,
+            )
         if delta_out is None:
             return res.ids, res.scores, res
         ds, di = delta_out
         cat_s = np.concatenate([res.scores, ds], axis=1)
         cat_i = np.concatenate([res.ids, di], axis=1)
-        ms, mi = kops.merge_topk(jnp.asarray(cat_s), jnp.asarray(cat_i), wl.k)
+        with tracer.span("delta.merge", m=wl.m):
+            ms, mi = kops.merge_topk(jnp.asarray(cat_s), jnp.asarray(cat_i), wl.k)
+            ms, mi = fence(ms, mi)
         return np.asarray(mi, dtype=np.int64), np.asarray(ms, dtype=np.float32), res
 
     # ----------------------------------------------------- background driver

@@ -93,6 +93,14 @@ class ServiceTelemetry:
 
     # --------------------------------------------------------------- reading
 
+    @staticmethod
+    def _rank(lats, q: float) -> float:
+        # nearest-rank percentile over a SORTED list: no numpy dependency
+        # needed host-side, and p99 of small samples stays an observed value
+        # rather than an interpolation between two
+        rank = min(len(lats) - 1, max(0, int(round(q / 100.0 * (len(lats) - 1)))))
+        return lats[rank]
+
     def latency_percentile(self, q: float) -> float:
         """Latency percentile in seconds; q in [0, 100]. 0.0 when empty."""
         with self._lock:
@@ -100,15 +108,14 @@ class ServiceTelemetry:
         if not lats:
             return 0.0
         lats.sort()
-        # nearest-rank percentile: no numpy dependency needed host-side, and
-        # p99 of small samples stays an observed value rather than an
-        # interpolation between two
-        rank = min(len(lats) - 1, max(0, int(round(q / 100.0 * (len(lats) - 1)))))
-        return lats[rank]
+        return self._rank(lats, q)
 
     def summary(self) -> Dict[str, float]:
+        # one lock acquisition, one deque copy, one sort — p50 and p99 read
+        # the same sorted window instead of each re-copying and re-sorting it
         with self._lock:
             n_q, n_f = self._n_queries, self._n_flushes
+            lats = list(self._latencies)
             out: Dict[str, float] = {
                 "queries": float(n_q),
                 "flushes": float(n_f),
@@ -121,6 +128,7 @@ class ServiceTelemetry:
                 "peak_candidate_bytes": float(self._peak_candidate_bytes),
                 "lut_bytes_per_flush": (self._lut_bytes / n_f) if n_f else 0.0,
             }
-        out["p50_latency_s"] = self.latency_percentile(50.0)
-        out["p99_latency_s"] = self.latency_percentile(99.0)
+        lats.sort()
+        out["p50_latency_s"] = self._rank(lats, 50.0) if lats else 0.0
+        out["p99_latency_s"] = self._rank(lats, 99.0) if lats else 0.0
         return out

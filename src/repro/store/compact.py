@@ -27,6 +27,7 @@ from __future__ import annotations
 import threading
 from typing import List, Optional
 
+from ..obs.trace import get_tracer
 from ..service.service import HQIService
 from .snapshot import (
     build_state,
@@ -76,23 +77,25 @@ class Compactor:
         worth folding) and ``force`` is False.
         """
         svc = self.service
-        with svc._flush_lock:
-            with svc._lock:
-                pending = svc.delta.n
-            if pending < self.min_delta_rows and not force:
-                return None
-            svc._refresh_locked()  # folds + seals the WAL segment
-            with svc._lock:
-                # capture the state tree — array REFERENCES, no blob I/O.
-                # Index mutations are replacements (extend swaps arrays), so
-                # the captured refs stay immutable after the locks drop and
-                # the blobs can stream to disk without blocking the service.
-                state = build_state(svc.index, live=svc._live.copy())
-                wal_seq = svc._wal_folded_seq
-        name = write_generation(self.root, state, wal_seq=wal_seq)
-        self.generations_written += 1
-        self._prune(wal_seq)
-        return name
+        with get_tracer().span("compact"):
+            with svc._flush_lock:
+                with svc._lock:
+                    pending = svc.delta.n
+                if pending < self.min_delta_rows and not force:
+                    return None
+                svc._refresh_locked()  # folds + seals the WAL segment
+                with svc._lock:
+                    # capture the state tree — array REFERENCES, no blob I/O.
+                    # Index mutations are replacements (extend swaps arrays),
+                    # so the captured refs stay immutable after the locks drop
+                    # and the blobs stream to disk without blocking the
+                    # service.
+                    state = build_state(svc.index, live=svc._live.copy())
+                    wal_seq = svc._wal_folded_seq
+            name = write_generation(self.root, state, wal_seq=wal_seq)
+            self.generations_written += 1
+            self._prune(wal_seq)
+            return name
 
     def _prune(self, newest_covered_seq: int) -> None:
         prune_generations(self.root, keep=self.keep_generations)

@@ -41,6 +41,7 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from ..core.hqi import HQIIndex
+from ..obs.trace import get_tracer
 from .wal import _fsync_dir
 
 FORMAT = "hqi-snapshot"
@@ -196,6 +197,11 @@ def save_snapshot(
 
 def write_generation(root: str, state: Dict[str, Any], *, wal_seq: int = 0) -> str:
     """Persist a captured state tree as the next generation (crash-safe)."""
+    with get_tracer().span("snapshot.write", wal_seq=int(wal_seq)):
+        return _write_generation(root, state, wal_seq=wal_seq)
+
+
+def _write_generation(root: str, state: Dict[str, Any], *, wal_seq: int = 0) -> str:
     os.makedirs(root, exist_ok=True)
     gens = list_generations(root)
     gen = (_gen_number(gens[-1]) + 1) if gens else 1
@@ -278,6 +284,11 @@ def load_snapshot(root: str, *, mmap: bool = True) -> Snapshot:
     Raises ``SnapshotError`` when no generation is loadable. ``mmap=False``
     forces full in-memory loads (tests / copying a snapshot elsewhere).
     """
+    with get_tracer().span("snapshot.load"):
+        return _load_snapshot(root, mmap=mmap)
+
+
+def _load_snapshot(root: str, *, mmap: bool = True) -> Snapshot:
     candidates: List[str] = []
     current = os.path.join(root, "CURRENT")
     if os.path.isfile(current):

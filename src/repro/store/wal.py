@@ -36,10 +36,14 @@ import io
 import os
 import struct
 import threading
+import time
 import zlib
 from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
+
+from ..obs.metrics import get_registry
+from ..obs.trace import get_tracer
 
 _MAGIC = 0x57414C31  # "WAL1"
 _HEADER = struct.Struct("<IQBII")  # magic, seq, kind, len, crc32
@@ -230,7 +234,12 @@ class WriteAheadLog:
         ok = False
         try:
             if fh is not None:
-                os.fsync(fh.fileno())
+                with get_tracer().span("wal.fsync", upto=upto):
+                    t0 = time.perf_counter()
+                    os.fsync(fh.fileno())
+                    get_registry().histogram("wal.fsync_s").observe(
+                        time.perf_counter() - t0
+                    )
             ok = True
         finally:
             with self._cv:
@@ -255,7 +264,7 @@ class WriteAheadLog:
         this segment's content is complete (a bad frame inside it is bit
         rot to surface, not a torn tail to truncate).
         """
-        with self._cv:
+        with self._cv, get_tracer().span("wal.rotate"):
             while self._sync_leader:
                 # an in-flight group fsync holds the segment's fd; closing
                 # it under the leader would fsync a dead descriptor

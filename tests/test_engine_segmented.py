@@ -116,7 +116,7 @@ def test_segmented_hqi_skewed_routing_parity(mode):
         assert np.array_equal(dense.ids, seg.ids), (mode, batch_vec)
     # the skewed plan really is ragged: raggedness is what this test is about
     st = ScanStats()
-    tasks, _ = hqi._engine_tasks(wl, nprobe=nprobe, batch_vec=True, stats=st)
+    tasks, _, _ = hqi._engine_tasks(wl, nprobe=nprobe, batch_vec=True, stats=st)
     from repro.core.plan import build_plan
 
     plan = build_plan(hqi.arena, tasks, wl.vectors, m=wl.m, k=wl.k, cfg=hqi.cfg.plan)
@@ -200,7 +200,7 @@ def test_build_plan_emits_seg_counts():
     hqi = HQIIndex.build(db, wl, HQIConfig(min_partition_size=128, max_leaves=16))
     st = ScanStats()
     nprobe = {t: (10 if t == 0 else 2) for t in range(len(wl.templates))}
-    tasks, _ = hqi._engine_tasks(wl, nprobe=nprobe, batch_vec=True, stats=st)
+    tasks, _, _ = hqi._engine_tasks(wl, nprobe=nprobe, batch_vec=True, stats=st)
     plan = build_plan(hqi.arena, tasks, wl.vectors, m=wl.m, k=wl.k, cfg=hqi.cfg.plan)
     counts = plan.seg_counts
     assert counts.shape == (wl.m,)

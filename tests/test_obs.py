@@ -1,0 +1,427 @@
+"""Observability layer: tracing, metrics registry, drift monitor.
+
+Covers the obs contracts the serving stack now leans on: span nesting and
+Chrome-trace schema (shared with the CI guard), the bounded ring buffer,
+thread-safety under concurrent spans, the zero-cost-when-disabled guarantee,
+streaming-histogram percentile bounds, ``DispatchStats.delta_since``, the
+single-sort telemetry summary, drift template-share math on a synthetic
+shifting stream, and — the acceptance criterion — a template shift injected
+mid-stream through a real ``HQIService`` that ``drift_report()`` must see,
+with the live recall probe scoring 1.0 in exact mode.
+"""
+import json
+import threading
+import time
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import HQIConfig, HQIIndex
+from repro.kernels.ops import DispatchStats
+from repro.obs import trace
+from repro.obs.drift import DriftConfig, DriftMonitor
+from repro.obs.metrics import Histogram, MetricsRegistry, get_registry, set_registry
+from repro.obs.trace import NullTracer, Tracer, validate_chrome_trace
+from repro.service import HQIService, ServiceConfig
+from repro.service.telemetry import ServiceTelemetry
+
+from conftest import small_db, small_workload
+
+EXACT = 10_000  # nprobe past every list count: search becomes exact
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Every test starts (and leaves) with the null tracer + a fresh registry."""
+    trace.disable()
+    set_registry(None)
+    yield
+    trace.disable()
+    set_registry(None)
+
+
+# ---------------------------------------------------------------------------
+# tracing
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_ordering():
+    t = Tracer()
+    with t.span("outer", m=4):
+        with t.span("inner"):
+            pass
+        with t.span("inner2"):
+            pass
+    evs = t.events()
+    by_name = {e["name"]: e for e in evs}
+    # children record before the enclosing span closes
+    assert [e["name"] for e in evs] == ["inner", "inner2", "outer"]
+    assert by_name["inner"]["args"]["parent"] == "outer"
+    assert by_name["inner2"]["args"]["parent"] == "outer"
+    assert "parent" not in by_name["outer"].get("args", {})
+    assert by_name["outer"]["args"]["m"] == 4
+    # children are contained in the parent's [ts, ts+dur] interval
+    o = by_name["outer"]
+    for child in ("inner", "inner2"):
+        c = by_name[child]
+        assert c["ts"] >= o["ts"]
+        assert c["ts"] + c["dur"] <= o["ts"] + o["dur"] + 1e-6
+    assert evs[0]["ts"] <= evs[1]["ts"]
+
+
+def test_add_span_shares_service_clock():
+    t = Tracer()
+    t0 = time.perf_counter()
+    time.sleep(0.01)
+    t1 = time.perf_counter()
+    t.add_span("queue.wait", t0, t1, qid=7)
+    (ev,) = t.events()
+    assert ev["ph"] == "X"
+    assert 8_000 <= ev["dur"] <= 1_000_000  # ~10ms in trace microseconds
+    assert ev["args"]["qid"] == 7
+
+
+def test_chrome_trace_schema_valid_and_mangled():
+    t = Tracer()
+    with t.span("a"):
+        pass
+    t.instant("mark", x=1)
+    t.counter("depth", 3)
+    doc = t.to_chrome_trace()
+    assert validate_chrome_trace(doc) == 3
+    assert json.loads(json.dumps(doc)) == doc  # JSON-serializable
+    # mangled documents fail with the offending index
+    with pytest.raises(ValueError):
+        validate_chrome_trace({"no_events": []})
+    with pytest.raises(ValueError, match="event 0"):
+        validate_chrome_trace([{"ph": "X", "ts": 0, "pid": 1, "tid": 1}])
+    with pytest.raises(ValueError, match="phase"):
+        validate_chrome_trace(
+            [{"name": "a", "ph": "?", "ts": 0, "pid": 1, "tid": 1}]
+        )
+    with pytest.raises(ValueError, match="dur"):
+        validate_chrome_trace(
+            [{"name": "a", "ph": "X", "ts": 0, "pid": 1, "tid": 1, "dur": -1}]
+        )
+
+
+def test_ring_buffer_bounds_memory():
+    t = Tracer(capacity=16)
+    for i in range(100):
+        with t.span(f"s{i}"):
+            pass
+    assert t.span_count == 100  # lifetime total survives eviction
+    evs = t.events()
+    assert len(evs) == 16  # bounded retention
+    assert [e["name"] for e in evs] == [f"s{i}" for i in range(84, 100)]  # newest
+
+
+def test_export_round_trip(tmp_path):
+    t = Tracer()
+    with t.span("flush", size=8):
+        pass
+    path = t.export(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_chrome_trace(doc) == 1
+    assert doc["traceEvents"][0]["name"] == "flush"
+
+
+def test_threaded_tracer_no_lost_spans():
+    t = Tracer(capacity=4096)
+
+    def hammer(tid):
+        for i in range(200):
+            with t.span("work", tid=tid, i=i):
+                pass
+
+    threads = [threading.Thread(target=hammer, args=(n,)) for n in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert t.span_count == 1600
+    assert len(t.events()) == 1600
+    validate_chrome_trace(t.to_chrome_trace())
+    # per-thread nesting stacks never leaked across threads
+    assert all("parent" not in e.get("args", {}) for e in t.events())
+
+
+def test_null_tracer_is_free():
+    trace.disable()
+    t = trace.get_tracer()
+    assert isinstance(t, NullTracer) and not t.enabled
+    # one shared no-op span object — no per-call allocation
+    assert t.span("a") is t.span("b")
+    tracemalloc.start()
+    base = tracemalloc.take_snapshot()
+    for _ in range(1000):
+        with t.span("hot"):
+            pass
+        t.instant("x")
+        t.counter("c", 1.0)
+    after = tracemalloc.take_snapshot()
+    tracemalloc.stop()
+    retained = sum(s.size_diff for s in after.compare_to(base, "lineno"))
+    assert t.span_count == 0 and t.events() == []
+    assert retained < 16_384  # nothing retained beyond tracemalloc noise
+
+
+def test_enable_disable_swaps_process_tracer():
+    t = trace.enable(capacity=8)
+    assert trace.get_tracer() is t and t.enabled
+    with trace.get_tracer().span("x"):
+        pass
+    assert t.span_count == 1
+    trace.disable()
+    with trace.get_tracer().span("y"):
+        pass
+    assert t.span_count == 1  # recorded nothing after disable
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_percentiles_bounded_error():
+    h = Histogram()
+    vals = np.linspace(0.001, 0.01, 1000)
+    for v in vals:
+        h.observe(float(v))
+    s = h.snapshot()
+    assert s["count"] == 1000
+    assert s["min"] == pytest.approx(0.001)
+    assert s["max"] == pytest.approx(0.01)
+    # quarter-decade buckets: interpolated quantiles within ~35% of truth
+    assert s["p50"] == pytest.approx(np.percentile(vals, 50), rel=0.35)
+    assert s["p99"] == pytest.approx(np.percentile(vals, 99), rel=0.35)
+    # quantiles clamp to the observed range even at the bucket edge
+    assert s["min"] <= s["p50"] <= s["p99"] <= s["max"]
+
+
+def test_histogram_empty_and_overflow():
+    h = Histogram(bounds=[1.0, 10.0])
+    assert h.snapshot()["count"] == 0
+    h.observe(0.5)
+    h.observe(5.0)
+    h.observe(1e9)  # overflow bucket
+    s = h.snapshot()
+    assert s["count"] == 3
+    assert s["max"] == 1e9
+
+
+def test_registry_snapshot_and_kind_mismatch():
+    reg = MetricsRegistry()
+    reg.counter("hits").inc()
+    reg.counter("hits").inc(2)
+    reg.gauge("depth").set(5)
+    reg.histogram("lat_s").observe(0.002)
+    reg.attach_source("svc", lambda: {"queries": 9})
+    snap = reg.snapshot()
+    assert snap["hits"] == 3
+    assert snap["depth"] == 5.0
+    assert snap["lat_s"]["count"] == 1
+    assert snap["svc"] == {"queries": 9}
+    with pytest.raises(TypeError):
+        reg.gauge("hits")  # name already bound to a counter
+    # a dead source reports its error instead of poisoning the read
+    reg.attach_source("dead", lambda: 1 / 0)
+    assert "error" in reg.snapshot()["dead"]
+    json.loads(reg.to_json())  # serializable end to end
+
+
+def test_default_registry_carries_dispatch_source():
+    snap = get_registry().snapshot()
+    assert "dispatch" in snap
+    assert {"knn_calls", "merge_calls"} <= set(snap["dispatch"])
+
+
+def test_dispatch_stats_delta_since():
+    a = DispatchStats()
+    a.record_knn((4, 8, 16, 5))
+    base = a.snapshot()
+    a.record_knn((4, 8, 16, 5))
+    a.record_knn((2, 8, 32, 5))
+    a.record_merge()
+    d = a.delta_since(base)
+    assert d.knn_calls == 2
+    assert d.merge_calls == 1
+    assert d.shapes == {(2, 8, 32, 5)}  # only shapes new since the baseline
+
+
+def test_telemetry_summary_single_sort_consistency():
+    t = ServiceTelemetry()
+    rng = np.random.default_rng(3)
+    lats = rng.random(1000).tolist()
+    t.record_flush(size=len(lats), queue_depth=0, knn_dispatches=1,
+                   merge_dispatches=1, seconds=0.1, latencies=lats)
+    s = t.summary()
+    assert s["p50_latency_s"] == t.latency_percentile(50.0)
+    assert s["p99_latency_s"] == t.latency_percentile(99.0)
+    arr = np.sort(lats)
+    assert abs(s["p50_latency_s"] - arr[len(arr) // 2]) < 0.01
+    assert s["p99_latency_s"] >= s["p50_latency_s"]
+
+
+# ---------------------------------------------------------------------------
+# drift
+# ---------------------------------------------------------------------------
+
+
+def test_drift_share_shift_synthetic():
+    mon = DriftMonitor(DriftConfig(window=200))
+    mon.observe_queries(["A"] * 70 + ["B"] * 30, t=1.0)  # older half
+    mon.observe_queries(["A"] * 30 + ["B"] * 70, t=2.0)  # recent half
+    rep = mon.report()
+    assert rep.n_window == 200
+    assert rep.window_span_s == pytest.approx(1.0)
+    assert rep.reference_shares == {"A": 0.7, "B": 0.3}
+    assert rep.template_shares == {"A": 0.3, "B": 0.7}
+    # TV distance: 0.5 * (|0.3-0.7| + |0.7-0.3|) = 0.4
+    assert rep.share_shift == pytest.approx(0.4)
+    json.loads(rep.to_json())
+
+
+def test_drift_disjoint_and_stationary_extremes():
+    mon = DriftMonitor(DriftConfig(window=100))
+    mon.observe_queries(["A"] * 50, t=0.0)
+    mon.observe_queries(["B"] * 50, t=1.0)
+    assert mon.report().share_shift == pytest.approx(1.0)  # disjoint mixes
+    mon2 = DriftMonitor(DriftConfig(window=100))
+    mon2.observe_queries(["A", "B"] * 50, t=0.0)
+    assert mon2.report().share_shift == pytest.approx(0.0)  # stationary
+    assert DriftMonitor().report().share_shift == 0.0  # empty window
+
+
+def test_drift_heat_and_growth():
+    mon = DriftMonitor()
+    mon.observe_probes({0: 30, 1: 10})
+    mon.observe_probes({0: 30, 2: 10})
+    rep = mon.report()
+    assert rep.part_heat == {0: 0.75, 1: 0.125, 2: 0.125}
+    mon.observe_delta(0, t=10.0)
+    mon.observe_delta(100, t=12.0)
+    rep = mon.report()
+    assert rep.delta_rows == 100
+    assert rep.delta_growth_per_s == pytest.approx(50.0)
+
+
+def test_drift_reservoir_bounded_and_deterministic():
+    cfg = DriftConfig(reservoir=8, seed=0)
+    a, b = DriftMonitor(cfg), DriftMonitor(cfg)
+    for mon in (a, b):
+        for i in range(100):
+            mon.maybe_sample(np.full(4, i, np.float32), (), np.array([i]))
+    assert len(a._reservoir) == 8 == len(b._reservoir)
+    assert [int(s[2][0]) for s in a._reservoir] == [int(s[2][0]) for s in b._reservoir]
+
+
+def _exact_service(db, wl, **cfg_kw):
+    hqi = HQIIndex.build(db, wl, HQIConfig(min_partition_size=128, max_leaves=16))
+    kw = dict(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0)
+    kw.update(cfg_kw)
+    return HQIService(hqi, ServiceConfig(**kw))
+
+
+def test_drift_detects_midstream_template_shift_in_service():
+    """Acceptance criterion: a template-share shift injected mid-stream
+    through the real service shows up in ``drift_report()``, and the live
+    recall probe scores 1.0 against brute force in exact mode."""
+    db = small_db(n=1200)
+    wl = small_workload(db, n_queries=80)
+    svc = _exact_service(db, wl, drift_window=160, recall_reservoir=32)
+    rows_a = np.where(wl.template_of <= 2)[0]  # templates {0,1,2} first...
+    rows_b = np.where(wl.template_of >= 3)[0]  # ...then {3,4,5}
+    for i in np.concatenate([np.repeat(rows_a, 2), np.repeat(rows_b, 2)]):
+        svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+    svc.drain()
+    rep = svc.drift_report(probe_recall=True)
+    assert rep.share_shift > 0.8  # near-disjoint template sets
+    shifted = set(rep.template_shares) - set(rep.reference_shares)
+    assert shifted  # templates present only in the recent half
+    assert rep.part_heat and abs(sum(rep.part_heat.values()) - 1.0) < 1e-6
+    assert rep.recall_samples > 0
+    assert rep.recall_at_k == pytest.approx(1.0)  # exact serving = perfect recall
+
+
+def test_drift_recall_probe_sees_delta_rows():
+    db = small_db(n=800)
+    wl = small_workload(db, n_queries=30)
+    svc = _exact_service(db, wl)
+    newv = np.random.default_rng(5).normal(size=(20, db.d)).astype(np.float32)
+    svc.insert(newv)  # served from the delta store, not the frozen index
+    for i in range(wl.m):
+        svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+    svc.drain()
+    rep = svc.drift_report(probe_recall=True)
+    assert rep.delta_rows == 20
+    assert rep.recall_at_k == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end service trace
+# ---------------------------------------------------------------------------
+
+
+def test_service_trace_end_to_end(tmp_path):
+    """A traced serving run exports schema-valid Chrome JSON carrying the
+    nested submit → queue.wait → flush → dispatch → merge → WAL spans."""
+    from repro.store.wal import WriteAheadLog
+
+    db = small_db(n=1200)
+    wl = small_workload(db, n_queries=40)
+    hqi = HQIIndex.build(db, wl, HQIConfig(min_partition_size=128, max_leaves=16))
+    wal = WriteAheadLog(str(tmp_path / "wal"))
+    svc = HQIService(
+        hqi,
+        ServiceConfig(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0,
+                      batch_vec=True),
+        wal=wal,
+    )
+    tracer = trace.enable()
+    try:
+        for i in range(wl.m):
+            svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+        svc.drain()
+        svc.insert(np.zeros((3, db.d), dtype=np.float32))
+        svc.refresh()
+    finally:
+        trace.disable()
+    doc = tracer.to_chrome_trace()
+    n = validate_chrome_trace(doc)
+    assert n == tracer.span_count
+    names = {e["name"] for e in doc["traceEvents"]}
+    required = {
+        "submit", "queue.wait", "flush", "flush.build", "flush.fulfill",
+        "engine.search", "engine.route", "plan.build", "plan.execute",
+        "queue.depth", "service.insert", "service.refresh", "wal.fsync",
+    }
+    assert required <= names, f"missing spans: {sorted(required - names)}"
+    assert any(n_.startswith("dispatch.") for n_ in names)
+    assert any(n_.startswith("merge.") for n_ in names)
+    # nested: every dispatch span records its parent chain back to the flush
+    disp = [e for e in doc["traceEvents"] if e["name"] == "dispatch.scan"]
+    assert disp and all(e["args"]["parent"] == "plan.execute" for e in disp)
+    # queue.wait spans carry qids and live inside the trace timeline
+    qw = [e for e in doc["traceEvents"] if e["name"] == "queue.wait"]
+    assert len(qw) == wl.m and all("qid" in e["args"] for e in qw)
+    path = tracer.export(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        assert validate_chrome_trace(json.load(f)) == n
+    # metrics registry saw the same run
+    snap = get_registry().snapshot()
+    assert snap["service.queue_wait_s"]["count"] == wl.m
+    assert snap["wal.fsync_s"]["count"] >= 1
+    assert snap["service"]["queries"] == wl.m
+
+
+def test_untraced_service_records_nothing(db, workload):
+    svc = _exact_service(db, workload)
+    for i in range(8):
+        svc.submit(workload.vectors[i], workload.templates[workload.template_of[i]])
+    svc.drain()
+    assert trace.get_tracer().span_count == 0
+    assert [h for h in ()] == []  # results still flow (drain answered all)
+    assert svc.telemetry.summary()["queries"] == 8

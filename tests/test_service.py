@@ -274,7 +274,7 @@ def test_threaded_service_and_dispatch_stats_thread_safety(db, workload):
         t.start()
     for t in threads:
         t.join()
-    assert ops.dispatch_stats().snapshot().knn_calls - base.knn_calls == 4000
+    assert ops.dispatch_stats().delta_since(base).knn_calls == 4000
     ops.reset_dispatch_stats()
 
     svc = _service(db, workload, max_batch=8, deadline_s=0.002, nprobe=8)
