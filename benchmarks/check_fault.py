@@ -1,0 +1,75 @@
+"""CI guard for the fault-injection layer (rides the chaos-smoke job).
+
+    PYTHONPATH=src python -m benchmarks.check_fault [BENCH_fault.json]
+
+Fails the build when
+  * the disarmed-failpoint overhead ratio from the fault bench exceeds
+    ``REPRO_FAULT_MAX_OVERHEAD`` (default 1.02 — the "failpoints left in
+    production paths cost < 2%" contract). The bench computes it as
+    1 + (evaluations per serving pass x microbenched ns-per-call) / pass
+    time — an exact pricing of the disarmed fast path, immune to the
+    several-percent kernel-dispatch jitter an end-to-end A/B would gate on;
+  * the bench's in-process chaos smoke violated a standing invariant:
+    a hung query, a lost acknowledged write, or a parity mismatch on a
+    non-degraded answer (all three rows must read exactly 0).
+
+A regression trips the gate through either factor: a slower fast path
+(someone put a lock or a dict lookup before the _ACTIVE check) or an
+evaluation-count explosion (someone put a failpoint inside a per-row loop).
+The invariant rows are exact and never environment-dependent: any nonzero
+value is a real bug.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+# chaos rows that must be exactly zero, whatever the machine
+ZERO_ROWS = ["fault/chaos_hung", "fault/chaos_lost_acked", "fault/chaos_parity"]
+
+
+def check(bench_path: str, max_ratio: float) -> list:
+    errors = []
+    with open(bench_path) as f:
+        bench = json.load(f)
+    rows = {r["name"]: r for r in bench.get("rows", [])}
+
+    row = rows.get("fault/overhead_ratio")
+    if row is None:
+        errors.append(f"{bench_path}: no fault/overhead_ratio row")
+    else:
+        try:
+            ratio = float(row["derived"].split("x", 1)[0])
+        except (ValueError, IndexError):
+            ratio = float(row["us_per_call"])
+        if ratio > max_ratio:
+            errors.append(
+                f"failpoint overhead {ratio:.3f}x exceeds gate {max_ratio:.2f}x"
+                f" ({row['derived']})"
+            )
+        else:
+            print(f"overhead ratio {ratio:.3f}x <= {max_ratio:.2f}x  OK")
+
+    for name in ZERO_ROWS:
+        row = rows.get(name)
+        if row is None:
+            errors.append(f"{bench_path}: no {name} row")
+        elif float(row["us_per_call"]) != 0.0:
+            errors.append(f"chaos invariant violated: {name} ({row['derived']})")
+    if not any(e.startswith("chaos") or e.endswith("row") for e in errors):
+        print("chaos invariants hold (0 hung / 0 lost acked / 0 parity)")
+    return errors
+
+
+def main() -> int:
+    bench_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_fault.json"
+    max_ratio = float(os.environ.get("REPRO_FAULT_MAX_OVERHEAD", "1.02"))
+    errors = check(bench_path, max_ratio)
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

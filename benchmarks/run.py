@@ -13,7 +13,7 @@ pq-vs-f32 bytes/recall, serving throughput) is tracked across PRs.
 import os
 import sys
 
-SMOKE_SUITES = ["engine", "kernels", "service", "distributed", "store", "obs"]
+SMOKE_SUITES = ["engine", "kernels", "service", "distributed", "store", "obs", "fault"]
 
 
 def main() -> None:
@@ -24,9 +24,9 @@ def main() -> None:
         args = args or SMOKE_SUITES
 
     from . import (
-        bench_distributed, bench_engine, bench_fig4_5, bench_fig6, bench_fig7,
-        bench_kernels, bench_service, bench_store, bench_table3_4, bench_table5,
-        common,
+        bench_distributed, bench_engine, bench_fault, bench_fig4_5, bench_fig6,
+        bench_fig7, bench_kernels, bench_service, bench_store, bench_table3_4,
+        bench_table5, common,
     )
 
     suites = {
@@ -41,6 +41,7 @@ def main() -> None:
         "distributed": bench_distributed.main,
         "store": bench_store.main,
         "obs": bench_service.main_obs,
+        "fault": bench_fault.main,
     }
     picks = args or list(suites)
     print("name,us_per_call,derived")

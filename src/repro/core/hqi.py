@@ -219,6 +219,19 @@ class HQIIndex:
             self._sharded = self.arena.shard(int(n_shards))
         return self._sharded
 
+    def attach_pq(self, pq: PQCodebook) -> None:
+        """Attach a codebook to an index built without one (scan_mode="f32").
+
+        Enables per-call ``search(scan_mode="pq")`` overrides — the serving
+        layer's overload degradation — while default searches stay exact. An
+        already-materialized arena is re-encoded in place; shard views are
+        invalidated (they alias the arena's code planes).
+        """
+        self.pq = pq
+        if self._arena is not None:
+            self._arena.attach_pq(pq)
+            self._sharded = None
+
     # ------------------------------------------------------------------ build
 
     @staticmethod
@@ -360,6 +373,8 @@ class HQIIndex:
         nprobe: Union[int, Dict[int, int]] = 8,
         batch_vec: Union[bool, str] = True,
         live_mask: Optional[np.ndarray] = None,
+        scan_mode: Optional[str] = None,
+        refine_factor: Optional[int] = None,
     ) -> SearchResult:
         """Batch HVQ processing: one global plan, megabatched dispatch.
 
@@ -372,7 +387,29 @@ class HQIIndex:
 
         live_mask: optional bool [db.n] of rows still alive — the serving
         layer's tombstones; dead rows are excluded from every result exactly.
+
+        scan_mode / refine_factor: per-call overrides of the build-time plan
+        config — the serving layer's overload degradation sheds an exact f32
+        deployment to ``scan_mode="pq"`` per flush without touching the
+        index. ``scan_mode="pq"`` requires a codebook (``attach_pq`` can add
+        one to an f32-built index).
         """
+        plan_cfg = self.cfg.plan
+        if scan_mode is not None or refine_factor is not None:
+            if (scan_mode or plan_cfg.scan_mode) == "pq":
+                assert self.pq is not None, (
+                    "scan_mode='pq' override needs a codebook — "
+                    "HQIIndex.attach_pq() first"
+                )
+            plan_cfg = dataclasses.replace(
+                plan_cfg,
+                scan_mode=plan_cfg.scan_mode if scan_mode is None else scan_mode,
+                refine_factor=(
+                    plan_cfg.refine_factor
+                    if refine_factor is None
+                    else int(refine_factor)
+                ),
+            )
         m, k = workload.m, workload.k
         stats = ScanStats()
         tracer = get_tracer()
@@ -396,7 +433,7 @@ class HQIIndex:
                     spec=spec,
                     m=m,
                     k=k,
-                    cfg=self.cfg.plan,
+                    cfg=plan_cfg,
                     extra=extra,
                     stats=stats,
                 )
@@ -405,13 +442,13 @@ class HQIIndex:
             arena = self.arena if tasks else None
             with tracer.span("plan.build", tasks=len(tasks)):
                 plan = build_plan(
-                    arena, tasks, workload.vectors, m=m, k=k, cfg=self.cfg.plan, stats=stats
+                    arena, tasks, workload.vectors, m=m, k=k, cfg=plan_cfg, stats=stats
                 )
             with tracer.span(
                 "plan.execute", buckets=len(plan.buckets), extras=len(extra)
             ):
                 run_s, run_i = execute_plan(
-                    plan, arena, workload.vectors, cfg=self.cfg.plan, extra=extra, stats=stats
+                    plan, arena, workload.vectors, cfg=plan_cfg, extra=extra, stats=stats
                 )
         return SearchResult(
             ids=run_i,

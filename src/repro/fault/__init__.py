@@ -1,0 +1,27 @@
+"""Fault injection & self-healing verification (failpoints, retry, chaos).
+
+Public API:
+    failpoint / arm / armed / disarm / disarm_all / fired / evaluated /
+        list_armed / SITES / FailpointError — the process-wide failpoint
+        registry (failpoints.py); zero-cost when disarmed
+    with_retries — bounded exponential-backoff retry for transient I/O
+    chaos (submodule, import lazily) — the live-service chaos harness:
+        ``python -m repro.fault.chaos --smoke``
+
+``repro.fault.chaos`` is deliberately NOT imported here: it pulls in the
+whole serving + store stack, while ``failpoints`` must stay importable from
+inside those very layers (service.py, wal.py, …) without a cycle.
+"""
+from .failpoints import (  # noqa: F401
+    SITES,
+    FailpointError,
+    arm,
+    armed,
+    disarm,
+    disarm_all,
+    evaluated,
+    failpoint,
+    fired,
+    list_armed,
+)
+from .retry import with_retries  # noqa: F401

@@ -79,6 +79,9 @@ def main():
         svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
     svc.drain()
 
+    print("== health ==")
+    print(json.dumps(svc.health().as_dict(), indent=2))
+
     print("== metrics ==")
     print(get_registry().to_json(indent=2))
 

@@ -48,6 +48,7 @@ from ..core.plan import _next_pow2
 from ..core.pq import PQCodebook, adc_tables, encode_pq
 from ..core.predicates import evaluate_filter
 from ..core.types import CATEGORICAL, Column, NUMERIC, SETCAT, VectorDatabase, Workload
+from ..fault.failpoints import failpoint
 from ..kernels import ops as kops
 
 
@@ -140,12 +141,31 @@ class DeltaStore:
         )
         return slab, ids
 
+    def abort_insert(self, ids: np.ndarray) -> None:
+        """Release a prepared-but-unlogged insert's id reservation.
+
+        ONLY legal when the prepared slab never reached the WAL (stage
+        failed) and no later prepare has happened — prepare and stage share
+        one critical section in service.py, so the aborted ids are always the
+        reservation's tail and handing them to the next insert is safe. A
+        slab that IS in the log must never be aborted: a replay would
+        re-mint its ids and diverge.
+        """
+        n = len(np.atleast_1d(ids))
+        assert self._reserved >= n, "abort_insert without matching prepare"
+        expect = self.first_id + self.n + self._reserved - n
+        assert n == 0 or int(np.atleast_1d(ids)[0]) == expect, (
+            "abort_insert out of order — only the newest reservation may abort"
+        )
+        self._reserved -= n
+
     def commit_insert(self, slab: VectorDatabase, ids: np.ndarray) -> np.ndarray:
         """Apply a prepared insert (no validation — see ``prepare_insert``).
 
         Prepared slabs MUST commit in id order (the service's group-commit
         path tickets them): rows concatenate, so first_id + position = id.
         """
+        failpoint("delta.apply")
         n = slab.n
         assert n == 0 or self.first_id + self.n == int(ids[0]), (
             "commit_insert out of id order"

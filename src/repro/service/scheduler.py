@@ -42,6 +42,10 @@ class PendingQuery:
     vector: np.ndarray  # f32 [d]
     filt: tuple  # canonical filter (see predicates.make_filter)
     t_submit: float
+    # absolute perf_counter deadline (service deadline policy); None = none.
+    # The service enforces it at flush take and at fulfill — the scheduler
+    # itself stays policy-free
+    t_deadline: Optional[float] = None
 
 
 class MicroBatchScheduler:

@@ -37,6 +37,21 @@ by ``store.recovery.open_service``/``init_store``), every ``insert``/
 the current WAL segment at the fold boundary, and ``store.compact.Compactor``
 periodically folds + snapshots so restart cost stays O(mmap + WAL tail).
 Without a WAL the service is purely in-memory, exactly as before.
+
+Self-healing (repro.fault): a flush-pipeline crash is contained per flush —
+that batch's handles fail with a structured ``QueryError`` and subsequent
+flushes keep serving (no stranded ``QueryHandle``, no dead scheduler
+thread). Per-query deadlines (``query_deadline_s`` / ``submit(deadline_s=)``)
+are enforced at admission and at fulfill, failing expired queries with
+``DeadlineExceeded`` instead of spending kernel time on answers nobody is
+waiting for. A poisoned WAL or a diverged delta apply quarantines the WRITE
+path (``ServiceReadOnly``, fail-fast) while reads keep serving. Under
+overload (queue depth or flush latency past the configured thresholds) the
+service sheds exactness for liveness — flushes degrade to ``scan_mode="pq"``
+at ``degraded_refine_factor`` when the index carries a codebook — and
+recovers automatically once pressure drops; degraded answers are flagged on
+their handles and surfaced in telemetry. ``health()`` is the structured
+ok/degraded/read-only status the future router tier consumes.
 """
 from __future__ import annotations
 
@@ -51,17 +66,21 @@ import numpy as np
 from ..core.hqi import HQIIndex
 from ..core.ivf import ScanStats
 from ..core.types import VectorDatabase, Workload
+from ..fault.failpoints import failpoint
 from ..kernels import ops as kops
 from ..obs.drift import DriftConfig, DriftMonitor, DriftReport
 from ..obs.metrics import get_registry
 from ..obs.trace import fence, get_tracer
 from .delta import DeltaStore
+from .errors import (  # noqa: F401 — QueueFull re-exported for compatibility
+    DeadlineExceeded,
+    QueryError,
+    QueueFull,
+    ResultPending,
+    ServiceReadOnly,
+)
 from .scheduler import MicroBatchScheduler, PendingQuery
 from .telemetry import ServiceTelemetry
-
-
-class QueueFull(RuntimeError):
-    """Admission control: the pending queue is at ``queue_bound``."""
 
 
 @dataclasses.dataclass
@@ -83,43 +102,132 @@ class ServiceConfig:
     # templates and reservoir size for the live recall probe
     drift_window: int = 4096
     recall_reservoir: int = 64
+    # per-query serving deadline (seconds from submit; None = no deadline).
+    # Overridable per call via submit(deadline_s=); enforced at admission
+    # (an already-lapsed deadline is rejected) and at flush/fulfill (expired
+    # queries fail with DeadlineExceeded instead of burning kernel time)
+    query_deadline_s: Optional[float] = None
+    # overload degradation: when the post-take queue depth or the flush wall
+    # time crosses a threshold, flushes shed to scan_mode="pq" at
+    # degraded_refine_factor (needs an index codebook — HQIIndex.attach_pq);
+    # recovery is automatic once BOTH pressures drop below threshold ×
+    # overload_recover_frac (hysteresis, so the mode doesn't flap)
+    overload_queue_depth: Optional[int] = None
+    overload_flush_s: Optional[float] = None
+    degraded_refine_factor: int = 1
+    overload_recover_frac: float = 0.5
 
 
 @dataclasses.dataclass
 class QueryHandle:
-    """Caller-side future for one submitted query."""
+    """Caller-side future for one submitted query.
+
+    Every handle *terminates*: fulfilled with (ids, scores), or failed with a
+    typed error — ``QueryError`` (the carrying flush crashed; contained) or
+    ``DeadlineExceeded`` (the per-query deadline lapsed). ``degraded`` marks
+    answers produced by an overload-shed (PQ-approximate) flush, so callers
+    comparing against exact references know to exclude them.
+    """
 
     qid: int
     t_submit: float
     ids: Optional[np.ndarray] = None  # i64 [k] once done (-1 padding)
     scores: Optional[np.ndarray] = None  # f32 [k] best-first
     t_done: float = 0.0
+    error: Optional[BaseException] = None
+    degraded: bool = False
     _event: threading.Event = dataclasses.field(
         default_factory=threading.Event, repr=False, compare=False
     )
 
     @property
     def done(self) -> bool:
+        """Terminated — fulfilled OR failed. Check ``ok`` to distinguish."""
         return self._event.is_set()
+
+    @property
+    def ok(self) -> bool:
+        return self._event.is_set() and self.error is None
 
     def wait(self, timeout: Optional[float] = None) -> bool:
         return self._event.wait(timeout)
 
-    def result(self) -> Tuple[np.ndarray, np.ndarray]:
-        """(ids, scores); raises if the query has not been answered yet."""
-        if not self.done:
-            raise RuntimeError(f"query {self.qid} not answered yet")
+    def result(
+        self, timeout: Optional[float] = None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids, scores) of a fulfilled query.
+
+        ``timeout=None`` is the non-blocking accessor: raises ``ResultPending``
+        if the query has not terminated yet. With a ``timeout``, blocks up to
+        that many seconds and raises ``DeadlineExceeded`` on expiry. A handle
+        that terminated in failure re-raises its stored typed error
+        (``QueryError`` / ``DeadlineExceeded``).
+        """
+        if not self._event.is_set():
+            if timeout is None:
+                raise ResultPending(f"query {self.qid} not answered yet")
+            if not self._event.wait(timeout):
+                raise DeadlineExceeded(
+                    f"result() timed out after {timeout}s for query {self.qid}",
+                    qid=self.qid,
+                )
+        if self.error is not None:
+            raise self.error
         return self.ids, self.scores
 
     @property
     def latency_s(self) -> float:
         return (self.t_done - self.t_submit) if self.done else float("nan")
 
-    def _fulfill(self, ids: np.ndarray, scores: np.ndarray, t_done: float) -> None:
+    def _fulfill(
+        self,
+        ids: np.ndarray,
+        scores: np.ndarray,
+        t_done: float,
+        degraded: bool = False,
+    ) -> None:
         self.ids = ids
         self.scores = scores
         self.t_done = t_done
+        self.degraded = degraded
         self._event.set()
+
+    def _fail(self, error: BaseException, t_done: float) -> None:
+        self.error = error
+        self.t_done = t_done
+        self._event.set()
+
+
+@dataclasses.dataclass
+class ServiceHealth:
+    """Structured serving status — what ``HQIService.health()`` returns and
+    what the metrics registry's ``health`` source publishes.
+
+    ``status`` is the one-word rollup a router shards traffic on:
+    ``"ok"`` (full exact serving), ``"degraded"`` (answering, but overload-shed
+    to approximate scans), ``"read-only"`` (write path quarantined — poisoned
+    WAL or diverged apply — reads still serving).
+    """
+
+    status: str
+    queue_depth: int
+    degraded: bool
+    read_only: bool
+    write_error: Optional[str]
+    wal_synced_seq: Optional[int]
+    applied_seq: int
+    last_flush_age_s: Optional[float]
+    last_flush_s: float
+    flush_failures: int
+    deadline_expired: int
+    compactor_failures: int
+    compactor_error: Optional[str]
+    armed_failpoints: Tuple[str, ...] = ()
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["armed_failpoints"] = list(self.armed_failpoints)
+        return d
 
 
 class HQIService:
@@ -172,7 +280,17 @@ class HQIService:
         # (latest service wins the "service" slot — one serving process is
         # the deployment unit)
         get_registry().attach_source("service", self.telemetry.summary)
+        get_registry().attach_source("health", lambda: self.health().as_dict())
         self._live = np.ones(index.db.n, dtype=bool)  # tombstones over indexed rows
+        # self-healing state (repro.fault). _write_poisoned: a delta apply
+        # diverged from what the WAL logged — permanent in-process write
+        # quarantine (restart + replay heals it). _degraded: overload shed to
+        # approximate scans. _last_flush_* feed the overload detector + health
+        self._write_poisoned: Optional[BaseException] = None
+        self._degraded = False
+        self._last_flush_s = 0.0
+        self._last_flush_done: Optional[float] = None
+        self._compactor = None  # back-ref set by store.compact.Compactor
         # state lock for scheduler + delta + live-mask: writers and the flush
         # snapshot take it BRIEFLY — kernel dispatch happens outside it, so
         # submit()/insert()/delete() never block for a flush's duration
@@ -189,9 +307,27 @@ class HQIService:
 
     # ------------------------------------------------------------ data plane
 
-    def submit(self, vector: np.ndarray, filt: tuple = ()) -> QueryHandle:
-        """Enqueue one hybrid query; answered at the next flush (tick/run)."""
+    def submit(
+        self,
+        vector: np.ndarray,
+        filt: tuple = (),
+        *,
+        deadline_s: Optional[float] = None,
+    ) -> QueryHandle:
+        """Enqueue one hybrid query; answered at the next flush (tick/run).
+
+        ``deadline_s`` (or ``ServiceConfig.query_deadline_s`` when omitted)
+        bounds submit→answer: an already-lapsed deadline is rejected here
+        (``DeadlineExceeded`` — admission control, nothing queued), and a
+        query whose deadline expires before its flush fulfills it is failed
+        with ``DeadlineExceeded`` on its handle instead of consuming kernel
+        time.
+        """
         now = time.perf_counter()
+        dl = self.cfg.query_deadline_s if deadline_s is None else deadline_s
+        if dl is not None and dl <= 0:
+            self.telemetry.record_deadline_expired()
+            raise DeadlineExceeded(f"deadline {dl}s lapsed at admission", qid=-1)
         with self._lock:
             if len(self.scheduler) >= self.cfg.queue_bound:
                 self.telemetry.record_rejected()
@@ -204,6 +340,7 @@ class HQIService:
                     vector=np.asarray(vector, dtype=np.float32),
                     filt=filt,
                     t_submit=now,
+                    t_deadline=None if dl is None else now + dl,
                 )
             )
         tracer = get_tracer()
@@ -230,14 +367,28 @@ class HQIService:
         ``wal.sync_upto`` outside it, and applies in ticket (= seq) order.
         """
         with get_tracer().span("service.insert"):
+            self._check_writable()
             if self.wal is None:
                 with self._lock:
                     slab, ids = self.delta.prepare_insert(vectors, columns, null_masks)
-                    self.delta.commit_insert(slab, ids)
+                    try:
+                        self.delta.commit_insert(slab, ids)
+                    except BaseException:
+                        # nothing logged, nothing applied — release the id
+                        # reservation so the next insert gets these ids
+                        self.delta.abort_insert(ids)
+                        raise
                 return ids
             with self._lock:
                 slab, ids = self.delta.prepare_insert(vectors, columns, null_masks)
-                seq = self.wal.stage_insert(slab.vectors, ids, columns, null_masks)
+                try:
+                    seq = self.wal.stage_insert(slab.vectors, ids, columns, null_masks)
+                except BaseException:
+                    # the frame never reached the log; releasing the
+                    # reservation is safe because prepare+stage share this
+                    # critical section — no later writer saw these ids
+                    self.delta.abort_insert(ids)
+                    raise
                 ticket = self._commit_tail
                 self._commit_tail += 1
             try:
@@ -264,6 +415,7 @@ class HQIService:
         """
         ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
         with get_tracer().span("service.delete"):
+            self._check_writable()
             if self.wal is None:
                 with self._lock:
                     return self._delete_locked(ids)
@@ -291,10 +443,22 @@ class HQIService:
             while self._commit_head != ticket:
                 self._commit_cv.wait()
             try:
-                return apply_fn()
+                out = apply_fn()
+            except BaseException as e:
+                # the record IS in the log but its effect is NOT in the live
+                # state — and the ids it reserved cannot be released (a replay
+                # would reproduce them). In-memory writes can never be
+                # reconciled with the log again: quarantine the write path
+                # (reads keep serving; restart + WAL replay heals). Crucially
+                # _applied_seq must NOT advance past this record — a fold
+                # claiming it as covered would drop it from recovery
+                self._write_poisoned = e
+                raise
+            else:
+                self._applied_seq = max(self._applied_seq, seq)
+                return out
             finally:
                 self._commit_head += 1
-                self._applied_seq = max(self._applied_seq, seq)
                 self._commit_cv.notify_all()
 
     def _delete_locked(self, ids: Iterable[int]) -> int:
@@ -309,6 +473,67 @@ class HQIService:
             elif self.delta.delete(ext_id):
                 n += 1
         return n
+
+    def _check_writable(self) -> None:
+        """Fail-fast gate on the write path (reads never come through here).
+
+        Two quarantine flavors: a poisoned WAL (durability I/O failed past
+        its retry budget — ``clear_poison()`` after fixing the disk heals it)
+        and a diverged delta apply (in-process state can no longer be
+        reconciled with the log — only restart + replay heals).
+        """
+        if self._write_poisoned is not None:
+            raise ServiceReadOnly(
+                "write path quarantined: delta apply diverged from WAL",
+                cause=self._write_poisoned,
+            )
+        if self.wal is not None and getattr(self.wal, "poisoned", None) is not None:
+            raise ServiceReadOnly(
+                "write path quarantined: WAL poisoned", cause=self.wal.poisoned
+            )
+
+    def health(self) -> ServiceHealth:
+        """Structured ok/degraded/read-only serving status (see ServiceHealth)."""
+        from ..fault import failpoints as _fp
+
+        with self._lock:
+            depth = len(self.scheduler)
+            degraded = self._degraded
+            apply_poison = self._write_poisoned
+            applied_seq = self._applied_seq
+            last_done = self._last_flush_done
+            last_s = self._last_flush_s
+        wal_poison = (
+            getattr(self.wal, "poisoned", None) if self.wal is not None else None
+        )
+        write_error = apply_poison if apply_poison is not None else wal_poison
+        read_only = write_error is not None
+        comp = self._compactor
+        tsum = self.telemetry.summary()
+        return ServiceHealth(
+            status=("read-only" if read_only else "degraded" if degraded else "ok"),
+            queue_depth=depth,
+            degraded=degraded,
+            read_only=read_only,
+            write_error=None if write_error is None else repr(write_error),
+            wal_synced_seq=None if self.wal is None else self.wal.synced_seq,
+            applied_seq=applied_seq,
+            last_flush_age_s=(
+                None if last_done is None else time.perf_counter() - last_done
+            ),
+            last_flush_s=last_s,
+            flush_failures=int(tsum["flush_failures"]),
+            deadline_expired=int(tsum["deadline_expired"]),
+            compactor_failures=(
+                0 if comp is None else int(comp.consecutive_failures)
+            ),
+            compactor_error=(
+                None
+                if comp is None or comp.last_error is None
+                else repr(comp.last_error)
+            ),
+            armed_failpoints=tuple(sorted(_fp.list_armed())),
+        )
 
     @property
     def n_live(self) -> int:
@@ -371,7 +596,8 @@ class HQIService:
     # ---------------------------------------------------------- serving loop
 
     def tick(self, now: Optional[float] = None) -> int:
-        """Flush once if a trigger fired; returns #queries answered."""
+        """Flush once if a trigger fired; returns #queries terminated."""
+        failpoint("scheduler.tick")
         with self._lock:
             if not self.scheduler.ready(now):
                 return 0
@@ -418,6 +644,27 @@ class HQIService:
                 if not batch:
                     return 0
                 depth = len(self.scheduler)
+                # deadline gate #1 (take): fail already-expired queries before
+                # spending any kernel time on them
+                t_take = time.perf_counter()
+                alive, expired = [], []
+                for pq in batch:
+                    dead = pq.t_deadline is not None and t_take >= pq.t_deadline
+                    (expired if dead else alive).append(pq)
+                for pq in expired:
+                    pq.handle._fail(
+                        DeadlineExceeded(
+                            f"deadline lapsed before flush (query {pq.handle.qid})",
+                            qid=pq.handle.qid,
+                        ),
+                        t_take,
+                    )
+                if expired:
+                    self.telemetry.record_deadline_expired(len(expired))
+                batch = alive
+                if not batch:
+                    return len(expired)
+                degraded = self._update_overload(depth)
                 wl, n_real = self.scheduler.build_workload(batch, self.cfg.k)
                 live = self._live.copy()
                 delta_view = self.delta.view()
@@ -435,17 +682,63 @@ class HQIService:
                 tracer.counter("queue.depth", depth)
             before = kops.dispatch_stats().snapshot()
             t0 = time.perf_counter()
-            with tracer.span("flush", size=n_real, depth=depth):
-                ids, scores, res = self._answer(wl, live, delta_view)
+            try:
+                with tracer.span("flush", size=n_real, depth=depth):
+                    failpoint("service.flush")
+                    ids, scores, res = self._answer(
+                        wl, live, delta_view, degraded=degraded
+                    )
+            except Exception as e:
+                # crash containment: this flush's queries fail typed, the
+                # service keeps serving — no stranded handle, no dead loop
+                t_done = time.perf_counter()
+                with self._lock:
+                    for pq in batch:
+                        pq.handle._fail(
+                            QueryError(
+                                f"flush pipeline failed (query {pq.handle.qid})",
+                                qid=pq.handle.qid,
+                                cause=e,
+                            ),
+                            t_done,
+                        )
+                    self._last_flush_s = t_done - t0
+                    self._last_flush_done = t_done
+                self.telemetry.record_flush_failure(len(batch))
+                get_registry().counter("service.flush_failures").inc(1)
+                return n_real + len(expired)
             dt = time.perf_counter() - t0
             delta_stats = kops.dispatch_stats().delta_since(before)
             t_done = time.perf_counter()
             with self._lock:
                 lats = []
+                n_late = 0
                 with tracer.span("flush.fulfill", size=n_real):
+                    # deadline gate #2 (fulfill): the answer exists but came
+                    # too late — the caller's contract says fail, not a
+                    # surprise stale success
                     for i, pq in enumerate(batch):
-                        pq.handle._fulfill(ids[i], scores[i], t_done)
-                        lats.append(t_done - pq.t_submit)
+                        if pq.t_deadline is not None and t_done >= pq.t_deadline:
+                            pq.handle._fail(
+                                DeadlineExceeded(
+                                    f"deadline lapsed during flush "
+                                    f"(query {pq.handle.qid})",
+                                    qid=pq.handle.qid,
+                                ),
+                                t_done,
+                            )
+                            n_late += 1
+                        else:
+                            pq.handle._fulfill(
+                                ids[i], scores[i], t_done, degraded=degraded
+                            )
+                            lats.append(t_done - pq.t_submit)
+                if n_late:
+                    self.telemetry.record_deadline_expired(n_late)
+                if degraded:
+                    self.telemetry.record_degraded_flush()
+                self._last_flush_s = dt
+                self._last_flush_done = t_done
                 self.telemetry.record_flush(
                     size=n_real,
                     queue_depth=depth,
@@ -457,7 +750,34 @@ class HQIService:
                     lut_bytes=res.lut_bytes,
                 )
             self._observe_flush(batch, ids, lats, res, delta_rows)
-        return n_real
+        return n_real + len(expired)
+
+    def _update_overload(self, depth: int) -> bool:
+        """Overload detector (caller holds the state lock): returns whether
+        THIS flush should run degraded. Enter on either pressure signal
+        (post-take queue depth, last flush wall time) crossing its threshold;
+        exit only when both drop below threshold × ``overload_recover_frac``
+        (hysteresis). Degrading needs a codebook — an index without ``pq``
+        never sheds, whatever the pressure."""
+        cfg = self.cfg
+        qd, fl = cfg.overload_queue_depth, cfg.overload_flush_s
+        if (qd is None and fl is None) or self.index.pq is None:
+            return False
+        over_q = qd is not None and depth >= qd
+        over_f = fl is not None and self._last_flush_s >= fl
+        if not self._degraded:
+            if over_q or over_f:
+                self._degraded = True
+                self.telemetry.record_degraded_transition()
+        else:
+            frac = cfg.overload_recover_frac
+            calm_q = qd is None or depth <= qd * frac
+            calm_f = fl is None or self._last_flush_s <= fl * frac
+            if calm_q and calm_f:
+                self._degraded = False
+                self.telemetry.record_degraded_transition()
+        get_registry().gauge("service.degraded").set(1 if self._degraded else 0)
+        return self._degraded
 
     def _observe_flush(self, batch, ids, lats, res, delta_rows: int) -> None:
         """Feed the metrics registry and drift monitor from one flush (runs
@@ -485,21 +805,30 @@ class HQIService:
         latency-sensitive paths."""
         return self.drift.report(self, probe_recall=probe_recall, k=k)
 
-    def _answer(self, wl: Workload, live: np.ndarray, delta_view):
+    def _answer(self, wl: Workload, live: np.ndarray, delta_view, degraded=False):
         """(ids i64 [m, k], scores f32 [m, k], SearchResult): engine + delta.
 
         Operates on the flush's snapshots (live mask copy, immutable delta
         view) so it can run outside the state lock. The engine's
         ``SearchResult`` rides along for the flush's telemetry (candidate
-        buffer peak, LUT bytes).
+        buffer peak, LUT bytes). A ``degraded`` flush sheds the main-index
+        scan to the ADC path (``scan_mode="pq"`` at ``degraded_refine_factor``)
+        — the delta scan stays as configured, since the delta buffer is small
+        by construction and never the overload source.
         """
         tracer = get_tracer()
+        scan_kw = (
+            {"scan_mode": "pq", "refine_factor": self.cfg.degraded_refine_factor}
+            if degraded
+            else {}
+        )
         with tracer.span("engine.search", m=wl.m):
             res = self.index.search(
                 wl,
                 nprobe=self.cfg.nprobe,
                 batch_vec=self.cfg.batch_vec,
                 live_mask=live,
+                **scan_kw,
             )
         with tracer.span("delta.scan", rows=len(delta_view.live)):
             delta_out = delta_view.scan(
@@ -529,7 +858,16 @@ class HQIService:
 
         def loop() -> None:
             while not self._stop_flag.is_set():
-                if self.tick() == 0:
+                try:
+                    n = self.tick()
+                except Exception:
+                    # a tick that dies must not kill the scheduler thread —
+                    # _flush already contained per-batch failures; anything
+                    # reaching here (e.g. an armed scheduler.tick failpoint)
+                    # is counted and survived
+                    self.telemetry.record_loop_error()
+                    n = 0
+                if n == 0:
                     time.sleep(poll)
 
         self._thread = threading.Thread(target=loop, name="hqi-service", daemon=True)

@@ -52,6 +52,15 @@ class ServiceTelemetry:
         self._max_depth = 0
         self._peak_candidate_bytes = 0
         self._lut_bytes = 0
+        # self-healing accounting (repro.fault): contained flush crashes,
+        # queries failed by deadline expiry, overload-degraded flushes and
+        # mode transitions, background-loop errors survived
+        self._flush_failures = 0
+        self._failed_queries = 0
+        self._deadline_expired = 0
+        self._degraded_flushes = 0
+        self._degraded_transitions = 0
+        self._loop_errors = 0
 
     # ------------------------------------------------------------- recording
 
@@ -91,6 +100,30 @@ class ServiceTelemetry:
         with self._lock:
             self._rejected += 1
 
+    def record_flush_failure(self, n_queries: int) -> None:
+        """One flush pipeline crash contained; its queries failed typed."""
+        with self._lock:
+            self._flush_failures += 1
+            self._failed_queries += int(n_queries)
+
+    def record_deadline_expired(self, n_queries: int = 1) -> None:
+        with self._lock:
+            self._deadline_expired += int(n_queries)
+
+    def record_degraded_flush(self) -> None:
+        with self._lock:
+            self._degraded_flushes += 1
+
+    def record_degraded_transition(self) -> None:
+        """Overload mode flipped (either direction — count both edges)."""
+        with self._lock:
+            self._degraded_transitions += 1
+
+    def record_loop_error(self) -> None:
+        """Background scheduler loop survived a tick exception."""
+        with self._lock:
+            self._loop_errors += 1
+
     # --------------------------------------------------------------- reading
 
     @staticmethod
@@ -127,6 +160,12 @@ class ServiceTelemetry:
                 "busy_qps": (n_q / self._busy_s) if self._busy_s > 0 else 0.0,
                 "peak_candidate_bytes": float(self._peak_candidate_bytes),
                 "lut_bytes_per_flush": (self._lut_bytes / n_f) if n_f else 0.0,
+                "flush_failures": float(self._flush_failures),
+                "failed_queries": float(self._failed_queries),
+                "deadline_expired": float(self._deadline_expired),
+                "degraded_flushes": float(self._degraded_flushes),
+                "degraded_transitions": float(self._degraded_transitions),
+                "loop_errors": float(self._loop_errors),
             }
         lats.sort()
         out["p50_latency_s"] = self._rank(lats, 50.0) if lats else 0.0

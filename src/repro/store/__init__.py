@@ -27,4 +27,11 @@ from .snapshot import (  # noqa: F401
     save_snapshot,
     write_generation,
 )
-from .wal import KIND_DELETE, KIND_INSERT, WalRecord, WriteAheadLog  # noqa: F401
+from .wal import (  # noqa: F401
+    KIND_DELETE,
+    KIND_INSERT,
+    WalCorruptionError,
+    WalPoisonedError,
+    WalRecord,
+    WriteAheadLog,
+)

@@ -27,6 +27,8 @@ from __future__ import annotations
 import threading
 from typing import List, Optional
 
+from ..fault.failpoints import failpoint
+from ..obs.metrics import get_registry
 from ..obs.trace import get_tracer
 from ..service.service import HQIService
 from .snapshot import (
@@ -56,6 +58,7 @@ class Compactor:
         interval_s: float = 30.0,
         min_delta_rows: int = 1,
         keep_generations: int = 2,
+        max_backoff_s: float = 300.0,
     ) -> None:
         assert service.wal is not None, "compaction needs a WAL-backed service"
         self.service = service
@@ -63,10 +66,37 @@ class Compactor:
         self.interval_s = float(interval_s)
         self.min_delta_rows = int(min_delta_rows)
         self.keep_generations = int(keep_generations)
+        # failure backoff (repro.fault): after N consecutive failed cycles the
+        # background loop waits interval_s · 2^N (capped) before retrying — a
+        # persistently failing snapshot disk must not be hammered every tick
+        self.max_backoff_s = float(max_backoff_s)
+        self.consecutive_failures = 0
         self.generations_written = 0
         self.last_error: Optional[BaseException] = None  # background health
         self._thread: Optional[threading.Thread] = None
         self._stop_flag = threading.Event()
+        # surface compactor health in the process registry (obsdump shows it)
+        get_registry().attach_source("compactor", self._metrics)
+        # back-ref for HQIService.health()'s compactor fields
+        service._compactor = self
+
+    def _metrics(self) -> dict:
+        return {
+            "generations_written": self.generations_written,
+            "consecutive_failures": self.consecutive_failures,
+            "last_error": None if self.last_error is None else repr(self.last_error),
+            "backoff_s": self._backoff_s(),
+        }
+
+    def _backoff_s(self) -> float:
+        """Current inter-cycle delay: interval, exponentially inflated by
+        consecutive failures, capped at ``max_backoff_s``."""
+        if self.consecutive_failures == 0:
+            return self.interval_s
+        return min(
+            self.max_backoff_s,
+            self.interval_s * (2.0 ** self.consecutive_failures),
+        )
 
     # ------------------------------------------------------------------ once
 
@@ -74,10 +104,25 @@ class Compactor:
         """One fold → snapshot → prune cycle; returns the new generation name.
 
         Returns None when the delta is below ``min_delta_rows`` (nothing
-        worth folding) and ``force`` is False.
+        worth folding) and ``force`` is False. Failure accounting lives here
+        (not only in the background loop) so synchronously driven compactors
+        report the same ``consecutive_failures``/``last_error`` health.
         """
+        try:
+            name = self._compact_once(force)
+        except Exception as e:
+            self.consecutive_failures += 1
+            self.last_error = e
+            raise
+        else:
+            self.consecutive_failures = 0
+            self.last_error = None
+            return name
+
+    def _compact_once(self, force: bool = False) -> Optional[str]:
         svc = self.service
         with get_tracer().span("compact"):
+            failpoint("compact.cycle")
             with svc._flush_lock:
                 with svc._lock:
                     pending = svc.delta.n
@@ -127,14 +172,15 @@ class Compactor:
         self._stop_flag.clear()
 
         def loop() -> None:
-            while not self._stop_flag.wait(self.interval_s):
+            while not self._stop_flag.wait(self._backoff_s()):
                 try:
                     self.compact_once()
-                    self.last_error = None
-                except Exception as e:  # keep compacting through transients
+                except Exception:  # keep compacting through transients
                     # (disk full, etc.): the service must outlive its
-                    # compactor; operators poll ``last_error``
-                    self.last_error = e
+                    # compactor. compact_once already recorded last_error and
+                    # bumped consecutive_failures — the next wait backs off
+                    # exponentially instead of hammering a failing disk
+                    pass
 
         self._thread = threading.Thread(target=loop, name="hqi-compactor", daemon=True)
         self._thread.start()

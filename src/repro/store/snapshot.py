@@ -41,6 +41,9 @@ from typing import Any, Dict, List, Optional
 import numpy as np
 
 from ..core.hqi import HQIIndex
+from ..fault.failpoints import failpoint
+from ..fault.retry import with_retries
+from ..obs.metrics import get_registry
 from ..obs.trace import get_tracer
 from .wal import _fsync_dir
 
@@ -229,10 +232,25 @@ def _write_generation(root: str, state: Dict[str, Any], *, wal_seq: int = 0) -> 
     os.makedirs(arrays_dir)
     for fname, arr in arrays.items():
         path = os.path.join(arrays_dir, fname)
-        with open(path, "wb") as f:
-            np.save(f, np.ascontiguousarray(arr))
-            f.flush()
-            os.fsync(f.fileno())
+
+        def _write_blob(path: str = path, arr: np.ndarray = arr) -> None:
+            failpoint("snapshot.write")
+            # "wb" truncates, so a retry after a partial write starts clean
+            with open(path, "wb") as f:
+                np.save(f, np.ascontiguousarray(arr))
+                f.flush()
+                os.fsync(f.fileno())
+
+        # transient blob-I/O faults retry with bounded backoff; a failure
+        # that outlives the budget aborts THIS generation only — the tmp dir
+        # never renamed into place, CURRENT untouched, old generations intact
+        with_retries(
+            _write_blob,
+            retry_on=(OSError,),
+            on_retry=lambda _a, _e: get_registry()
+            .counter("snapshot.write_retries")
+            .inc(1),
+        )
     # manifest LAST: its presence marks the generation complete
     with open(os.path.join(tmp_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
@@ -289,6 +307,7 @@ def load_snapshot(root: str, *, mmap: bool = True) -> Snapshot:
 
 
 def _load_snapshot(root: str, *, mmap: bool = True) -> Snapshot:
+    failpoint("snapshot.load")
     candidates: List[str] = []
     current = os.path.join(root, "CURRENT")
     if os.path.isfile(current):

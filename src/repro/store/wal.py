@@ -42,6 +42,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from ..fault.failpoints import failpoint
+from ..fault.retry import with_retries
 from ..obs.metrics import get_registry
 from ..obs.trace import get_tracer
 
@@ -57,6 +59,20 @@ _SEG_PREFIX = "wal-"
 
 class WalCorruptionError(RuntimeError):
     """A sealed segment holds a bad frame: records behind it are unreachable."""
+
+
+class WalPoisonedError(RuntimeError):
+    """The WAL quarantined itself: a group-commit fsync failed past its retry
+    budget, so durability can no longer be promised. Writes fail fast with
+    this error (``cause`` is the original I/O failure); reads — ``replay``,
+    ``segments`` — keep working, and ``clear_poison()`` re-opens the write
+    path once the operator has fixed the device."""
+
+    def __init__(self, message: str, *, cause: Optional[BaseException] = None) -> None:
+        super().__init__(message)
+        self.cause = cause
+        if cause is not None:
+            self.__cause__ = cause
 
 
 def _fsync_dir(path: str) -> None:
@@ -136,9 +152,16 @@ class WriteAheadLog:
     stage + sync_upto, preserving the single-caller contract unchanged.
     """
 
-    def __init__(self, path: str, *, sync: bool = True) -> None:
+    def __init__(
+        self, path: str, *, sync: bool = True, fsync_retries: int = 3
+    ) -> None:
         self.path = path
         self.sync = bool(sync)
+        # transient-fault budget for the group-commit fsync (repro.fault):
+        # an fsync that keeps failing past this many attempts (exponential
+        # backoff + jitter between them) poisons the log — see ``poisoned``
+        self.fsync_retries = max(1, int(fsync_retries))
+        self.poisoned: Optional[BaseException] = None
         os.makedirs(path, exist_ok=True)
         self._fh: Optional[io.BufferedWriter] = None
         self._seg: Optional[str] = None
@@ -200,6 +223,12 @@ class WriteAheadLog:
         actual frame write (which fixes seq order = file order = replay
         order, the invariant recovery's id-stability assert depends on).
         """
+        if self.poisoned is not None:
+            raise WalPoisonedError(
+                "WAL quarantined after unrecoverable fsync failure",
+                cause=self.poisoned,
+            )
+        failpoint("wal.stage")
         payload = _encode_payload(arrays)
         with self._mu:
             if self._fh is None:
@@ -232,11 +261,33 @@ class WriteAheadLog:
             fh = self._fh
             upto = self.last_seq
         ok = False
+        err: Optional[BaseException] = None
         try:
             if fh is not None:
                 with get_tracer().span("wal.fsync", upto=upto):
                     t0 = time.perf_counter()
-                    os.fsync(fh.fileno())
+
+                    def _sync() -> None:
+                        failpoint("wal.fsync")
+                        os.fsync(fh.fileno())
+
+                    try:
+                        # transient I/O faults are retried with bounded
+                        # exponential backoff; a failure that outlives the
+                        # budget poisons the log (durability can no longer be
+                        # promised) and propagates to every caller whose
+                        # record this batch covered
+                        with_retries(
+                            _sync,
+                            attempts=self.fsync_retries,
+                            retry_on=(OSError,),
+                            on_retry=lambda _a, _e: get_registry()
+                            .counter("wal.fsync_retries")
+                            .inc(1),
+                        )
+                    except BaseException as e:
+                        err = e
+                        raise
                     get_registry().histogram("wal.fsync_s").observe(
                         time.perf_counter() - t0
                     )
@@ -246,8 +297,25 @@ class WriteAheadLog:
                 self._sync_leader = False
                 if ok and fh is not None:
                     self._synced_seq = max(self._synced_seq, upto)
+                elif err is not None and not isinstance(err, KeyboardInterrupt):
+                    self.poisoned = err
                 self._cv.notify_all()
         return self._synced_seq
+
+    @property
+    def synced_seq(self) -> int:
+        """Durable high-water mark: the largest seq an ack may cover."""
+        return self._synced_seq
+
+    def clear_poison(self) -> None:
+        """Operator hook: re-open the write path after fixing the device.
+
+        Safe because a poisoned fsync never advanced ``_synced_seq`` — any
+        record the failure left non-durable was never acknowledged, and the
+        next successful group fsync covers it or its torn remains truncate
+        on restart.
+        """
+        self.poisoned = None
 
     def append(self, kind: int, arrays: Dict[str, np.ndarray]) -> int:
         """Commit one record durably; returns its sequence number."""

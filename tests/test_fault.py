@@ -1,0 +1,575 @@
+"""Fault injection & self-healing: failpoints, retries, quarantine, chaos.
+
+The load-bearing guarantees:
+
+  * the failpoint registry is deterministic (seeded prob draws, bounded
+    counts) and a disarmed site is a no-op — production paths keep their
+    instrumentation for free;
+  * an fsync fault mid-group-commit means the affected writes are NOT
+    acknowledged, the WAL is poisoned (writes fail fast ``ServiceReadOnly``,
+    reads keep serving), and a crash + ``open_service`` replays exactly the
+    acknowledged prefix;
+  * a snapshot-write fault mid-compaction leaves the old generation CURRENT
+    and loadable, WAL segments unpruned, and the compactor backing off
+    exponentially until a cycle succeeds;
+  * a flush crash fails that batch typed (``QueryError``) and the service
+    keeps answering with exact parity;
+  * per-query deadlines are enforced at admission, take, and fulfill;
+  * overload sheds to PQ-approximate scans and recovers with hysteresis;
+  * the seeded chaos run (>= 200 queries, >= 5 distinct sites fired) upholds
+    the standing invariants: no lost acked write, no hung query, exact
+    parity on non-degraded answers.
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import HQIConfig, HQIIndex, train_pq
+from repro.fault import FailpointError, failpoints, with_retries
+from repro.fault.chaos import ChaosConfig, run_chaos
+from repro.service import (
+    DeadlineExceeded,
+    HQIService,
+    QueryError,
+    ResultPending,
+    ServiceConfig,
+    ServiceReadOnly,
+)
+from repro.store import (
+    Compactor,
+    WalPoisonedError,
+    init_store,
+    list_generations,
+    load_snapshot,
+    open_service,
+)
+
+from conftest import assert_same_results, small_db, small_workload
+
+EXACT = 10_000  # nprobe past every list count: search becomes exact
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    """Every test starts and ends with no armed failpoints (process-global)."""
+    failpoints.disarm_all()
+    yield
+    failpoints.disarm_all()
+
+
+def _service(db, wl, **cfg_kw):
+    hqi = HQIIndex.build(db, wl, HQIConfig(min_partition_size=128, max_leaves=8))
+    kw = dict(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0)
+    kw.update(cfg_kw)
+    return HQIService(hqi, ServiceConfig(**kw))
+
+
+def _store_service(root, db, wl, **cfg_kw):
+    hqi = HQIIndex.build(db, wl, HQIConfig(min_partition_size=128, max_leaves=8))
+    kw = dict(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0)
+    kw.update(cfg_kw)
+    return init_store(str(root), hqi, cfg=ServiceConfig(**kw))
+
+
+def _stream(svc, wl):
+    handles = [
+        svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]]) for i in range(wl.m)
+    ]
+    svc.drain()
+    assert all(h.done for h in handles)
+    return handles
+
+
+def _offline(svc, wl):
+    """Ground truth: offline HQIIndex.search over the live-DB snapshot."""
+    snap = svc.snapshot_db()
+    live = svc.live_ids()
+    offline = HQIIndex.build(snap, wl, HQIConfig(min_partition_size=128, max_leaves=8))
+    res = offline.search(wl, nprobe=EXACT)
+    ids = np.where(res.ids >= 0, live[np.maximum(res.ids, 0)], -1)
+    return ids, res.scores
+
+
+@pytest.fixture(scope="module")
+def db():
+    return small_db(n=1500, seed=11)
+
+
+@pytest.fixture(scope="module")
+def workload(db):
+    return small_workload(db, n_queries=40)
+
+
+def _payload(rng, n, d):
+    return (
+        rng.normal(size=(n, d)).astype(np.float32),
+        {
+            "A": rng.random(n).astype(np.float32),
+            "B": rng.random(n).astype(np.float32),
+            "cat": rng.integers(0, 8, n).astype(np.int32),
+            "tags": (rng.random((n, 6)) < 0.3),
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Failpoint registry
+# ---------------------------------------------------------------------------
+
+
+def test_failpoint_disarmed_is_noop():
+    assert failpoints.failpoint("wal.fsync") is None
+    assert failpoints.fired("wal.fsync") == 0
+    assert failpoints.evaluated("wal.fsync") == 0
+    assert not failpoints._ACTIVE
+
+
+def test_failpoint_arm_count_and_heal():
+    failpoints.arm("wal.fsync", "oserror", count=2)
+    for _ in range(2):
+        with pytest.raises(OSError):
+            failpoints.failpoint("wal.fsync")
+    # count exhausted: the site healed
+    failpoints.failpoint("wal.fsync")
+    assert failpoints.fired("wal.fsync") == 2
+    assert failpoints.evaluated("wal.fsync") == 3
+    failpoints.disarm("wal.fsync")
+    assert not failpoints._ACTIVE
+
+
+def test_failpoint_skip_and_prob_determinism():
+    failpoints.arm("service.flush", FailpointError, skip=3)
+    for _ in range(3):
+        failpoints.failpoint("service.flush")
+    with pytest.raises(FailpointError):
+        failpoints.failpoint("service.flush")
+
+    def draws(seed):
+        failpoints.arm("scheduler.tick", "runtimeerror", prob=0.5, seed=seed)
+        out = []
+        for _ in range(20):
+            try:
+                failpoints.failpoint("scheduler.tick")
+                out.append(0)
+            except RuntimeError:
+                out.append(1)
+        failpoints.disarm("scheduler.tick")
+        return out
+
+    a, b = draws(7), draws(7)
+    assert a == b  # seeded prob draws are reproducible
+    assert 0 < sum(a) < 20
+
+
+def test_failpoint_strict_and_error_forms():
+    with pytest.raises(KeyError):
+        failpoints.arm("no.such.site", "oserror")
+    failpoints.arm("no.such.site", "oserror", strict=False)
+    with pytest.raises(OSError):
+        failpoints.failpoint("no.such.site")
+    failpoints.disarm("no.such.site")
+    # ready instance raised as-is; factory gets the site name
+    sentinel = ValueError("sentinel")
+    with failpoints.armed("wal.stage", sentinel):
+        with pytest.raises(ValueError) as ei:
+            failpoints.failpoint("wal.stage")
+        assert ei.value is sentinel
+    with failpoints.armed("wal.stage", lambda site: KeyError(site)):
+        with pytest.raises(KeyError, match="wal.stage"):
+            failpoints.failpoint("wal.stage")
+    assert not failpoints._ACTIVE
+
+
+def test_failpoint_env_grammar():
+    failpoints._arm_from_env("wal.fsync=oserror:p0.25:n3:s2:seed9, custom.site=")
+    armed = failpoints.list_armed()
+    assert armed["wal.fsync"] == {"prob": 0.25, "remaining": 3, "skip": 2}
+    assert armed["custom.site"]["prob"] == 1.0
+    with pytest.raises(FailpointError):
+        failpoints.failpoint("custom.site")
+    with pytest.raises(ValueError):
+        failpoints._arm_from_env("wal.fsync=oserror:x3")
+
+
+def test_with_retries_transient_and_fatal():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise OSError("transient")
+        return "ok"
+
+    waited = []
+    assert (
+        with_retries(flaky, attempts=3, sleep=waited.append) == "ok"
+    )
+    assert len(calls) == 3 and len(waited) == 2
+    assert waited[1] > 0  # backoff grows (jittered, but never zero after base)
+
+    with pytest.raises(OSError):  # budget exhausted: last error propagates
+        with_retries(lambda: (_ for _ in ()).throw(OSError("always")),
+                     attempts=2, sleep=lambda _s: None)
+    with pytest.raises(ValueError):  # non-retryable: immediate, single call
+        with_retries(lambda: (_ for _ in ()).throw(ValueError("fatal")),
+                     attempts=5, sleep=lambda _s: None)
+
+
+# ---------------------------------------------------------------------------
+# WAL: transient fsync retry, poisoning quarantine, stage abort
+# ---------------------------------------------------------------------------
+
+
+def test_wal_fsync_transient_fault_retried(tmp_path, db, workload):
+    """A transient fsync fault is absorbed by the retry budget: the insert
+    acks normally and the WAL stays healthy."""
+    svc = _store_service(tmp_path, db, workload)
+    rng = np.random.default_rng(0)
+    vecs, cols = _payload(rng, 3, db.d)
+    with failpoints.armed("wal.fsync", "oserror", count=1):
+        ids = svc.insert(vecs, cols)
+    assert failpoints.fired("wal.fsync") == 1
+    assert svc.wal.poisoned is None
+    assert svc.wal.synced_seq == svc._applied_seq
+    assert set(ids.tolist()) <= set(svc.live_ids().tolist())
+
+
+def test_wal_fsync_poison_quarantine_heal_and_replay(tmp_path, db, workload):
+    """fsync failing past its retry budget mid-group-commit: the writers in
+    that commit are NOT acked, the service turns read-only (reads still
+    serve), clear_poison() heals it, and a crash + open_service replays
+    exactly the acknowledged writes."""
+    svc = _store_service(tmp_path, db, workload)
+    rng = np.random.default_rng(1)
+    vecs, cols = _payload(rng, 4, db.d)
+    acked = svc.insert(vecs, cols)
+
+    # two concurrent writers share the poisoned group commit: neither acks
+    errs = {}
+
+    def writer(name, seed):
+        v, c = _payload(np.random.default_rng(seed), 2, db.d)
+        try:
+            svc.insert(v, c)
+        except BaseException as e:
+            errs[name] = e
+
+    with failpoints.armed("wal.fsync", "oserror", count=svc.wal.fsync_retries * 2):
+        ts = [threading.Thread(target=writer, args=(n, 50 + n)) for n in range(2)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    assert set(errs) == {0, 1}
+    assert all(isinstance(e, (OSError, WalPoisonedError)) for e in errs.values())
+    assert svc.wal.poisoned is not None
+
+    # quarantined: writes fail fast, reads keep serving
+    with pytest.raises(ServiceReadOnly):
+        svc.insert(vecs, cols)
+    with pytest.raises(ServiceReadOnly):
+        svc.delete([0])
+    h = svc.health()
+    assert h.status == "read-only" and h.read_only and h.write_error
+    handles = _stream(svc, workload)
+    assert all(hd.ok for hd in handles)
+
+    # operator heal: the disk is "fixed", writes resume
+    svc.wal.clear_poison()
+    assert svc.health().status == "ok"
+    vecs2, cols2 = _payload(rng, 2, db.d)
+    acked2 = svc.insert(vecs2, cols2)
+
+    # crash + recover: every acked write survives with the same ids
+    svc.wal.close()
+    rec = open_service(str(tmp_path), cfg=svc.cfg)
+    live = set(rec.live_ids().tolist())
+    assert set(acked.tolist()) <= live
+    assert set(acked2.tolist()) <= live
+    got = _stream(rec, workload)
+    exp = _offline(rec, workload)
+    assert_same_results(
+        np.stack([h.scores for h in got]), np.stack([h.ids for h in got]), exp[1], exp[0]
+    )
+    rec.wal.close()
+
+
+def test_wal_stage_fault_releases_id_reservation(tmp_path, db, workload):
+    """A stage failure never reaches the log, so its id reservation is
+    released: the next insert gets the same ids and recovery agrees."""
+    svc = _store_service(tmp_path, db, workload)
+    rng = np.random.default_rng(2)
+    vecs, cols = _payload(rng, 3, db.d)
+    next_id = svc.index.db.n + svc.delta.n
+    with failpoints.armed("wal.stage", "oserror"):
+        with pytest.raises(OSError):
+            svc.insert(vecs, cols)
+    ids = svc.insert(vecs, cols)
+    assert ids[0] == next_id  # no id gap from the aborted reservation
+    svc.wal.close()
+    rec = open_service(str(tmp_path), cfg=svc.cfg)
+    assert set(ids.tolist()) <= set(rec.live_ids().tolist())
+    rec.wal.close()
+
+
+def test_delta_apply_poison_heals_on_restart(tmp_path, db, workload):
+    """An apply failure AFTER the WAL logged the record quarantines the write
+    path permanently in-process (the log and memory diverged), but restart +
+    replay heals: the logged record's rows are live after recovery."""
+    svc = _store_service(tmp_path, db, workload)
+    rng = np.random.default_rng(3)
+    vecs, cols = _payload(rng, 2, db.d)
+    with failpoints.armed("delta.apply", "runtimeerror"):
+        with pytest.raises(RuntimeError):
+            svc.insert(vecs, cols)
+    assert svc._write_poisoned is not None
+    with pytest.raises(ServiceReadOnly):
+        svc.insert(vecs, cols)
+    assert svc.health().status == "read-only"
+    handles = _stream(svc, workload)  # reads unaffected
+    assert all(h.ok for h in handles)
+
+    logged_seq = svc.wal.last_seq
+    svc.wal.close()
+    rec = open_service(str(tmp_path), cfg=svc.cfg)
+    assert rec._applied_seq == logged_seq  # the diverged record replayed
+    assert rec.health().status == "ok"
+    ids2 = rec.insert(vecs, cols)
+    assert set(ids2.tolist()) <= set(rec.live_ids().tolist())
+    rec.wal.close()
+
+
+# ---------------------------------------------------------------------------
+# Compaction: snapshot-write faults, exponential backoff
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_write_fault_keeps_old_generation_current(tmp_path, db, workload):
+    svc = _store_service(tmp_path, db, workload)
+    comp = Compactor(svc, str(tmp_path), interval_s=0.5, keep_generations=2)
+    rng = np.random.default_rng(4)
+    vecs, cols = _payload(rng, 5, db.d)
+    ids = svc.insert(vecs, cols)
+
+    gens_before = list_generations(str(tmp_path))
+    with open(os.path.join(str(tmp_path), "CURRENT")) as f:
+        current_before = f.read()
+    segs_before = svc.wal.segments()
+
+    # past the retry budget: every attempt on the first blob fails
+    with failpoints.armed("snapshot.write", "oserror", count=100):
+        with pytest.raises(OSError):
+            comp.compact_once(force=True)
+    assert comp.consecutive_failures == 1
+    assert comp.last_error is not None
+    assert comp._backoff_s() == pytest.approx(comp.interval_s * 2.0)
+    # CURRENT still points at the old generation; nothing was pruned
+    with open(os.path.join(str(tmp_path), "CURRENT")) as f:
+        assert f.read() == current_before
+    assert list_generations(str(tmp_path)) == gens_before
+    assert svc.wal.segments() == segs_before
+    assert svc.health().compactor_failures == 1
+    # the old generation still loads and serves
+    assert load_snapshot(str(tmp_path)).index is not None
+
+    # repeated failures inflate the backoff exponentially (capped)
+    with failpoints.armed("snapshot.write", "oserror", count=100):
+        for _ in range(2):
+            with pytest.raises(OSError):
+                comp.compact_once(force=True)
+    assert comp.consecutive_failures == 3
+    assert comp._backoff_s() == pytest.approx(comp.interval_s * 8.0)
+    comp.max_backoff_s = 1.0
+    assert comp._backoff_s() == 1.0  # cap
+
+    # success resets the health and writes a fresh generation
+    name = comp.compact_once(force=True)
+    assert name is not None
+    assert comp.consecutive_failures == 0 and comp.last_error is None
+    assert comp._backoff_s() == comp.interval_s
+    assert svc.health().compactor_failures == 0
+    rec_live = set(load_snapshot(str(tmp_path)).index.db.ids.tolist())
+    assert set(ids.tolist()) <= rec_live
+    svc.wal.close()
+
+
+def test_snapshot_write_transient_fault_retried(tmp_path, db, workload):
+    """One blob-write fault inside the retry budget: the cycle still lands."""
+    svc = _store_service(tmp_path, db, workload)
+    comp = Compactor(svc, str(tmp_path))
+    rng = np.random.default_rng(5)
+    vecs, cols = _payload(rng, 3, db.d)
+    svc.insert(vecs, cols)
+    with failpoints.armed("snapshot.write", "oserror", count=1):
+        assert comp.compact_once(force=True) is not None
+    assert comp.consecutive_failures == 0
+    svc.wal.close()
+
+
+# ---------------------------------------------------------------------------
+# Serving: flush crash containment, deadlines, result(), overload
+# ---------------------------------------------------------------------------
+
+
+def test_flush_crash_contained_and_service_keeps_answering(db, workload):
+    svc = _service(db, workload)
+    with failpoints.armed("service.flush", "runtimeerror", count=1):
+        handles = [svc.submit(workload.vectors[i]) for i in range(4)]
+        svc.drain()
+    assert all(h.done and not h.ok for h in handles)
+    for h in handles:
+        assert isinstance(h.error, QueryError)
+        assert isinstance(h.error.cause, RuntimeError)
+        with pytest.raises(QueryError):
+            h.result()
+    assert svc.telemetry.summary()["flush_failures"] == 1
+
+    # the very next stream answers, with exact parity
+    got = _stream(svc, workload)
+    assert all(h.ok for h in got)
+    exp = _offline(svc, workload)
+    assert_same_results(
+        np.stack([h.scores for h in got]), np.stack([h.ids for h in got]), exp[1], exp[0]
+    )
+
+
+def test_background_loop_survives_flush_and_tick_faults(db, workload):
+    """start()'s loop must outlive injected tick/flush crashes: queries
+    submitted after the faults heal are still answered."""
+    svc = _service(db, workload, deadline_s=0.001)
+    failpoints.arm("scheduler.tick", "runtimeerror", count=2)
+    failpoints.arm("service.flush", "runtimeerror", count=1)
+    svc.start(poll_s=0.002)
+    try:
+        handles = [svc.submit(workload.vectors[i]) for i in range(6)]
+        for h in handles:
+            assert h.wait(timeout=30.0)
+        failpoints.disarm_all()
+        h_ok = svc.submit(workload.vectors[0])
+        assert h_ok.wait(timeout=30.0) and h_ok.ok
+    finally:
+        svc.stop(drain=False)
+    assert svc.telemetry.summary()["loop_errors"] >= 1
+
+
+def test_deadline_admission_and_expiry(db, workload):
+    svc = _service(db, workload)
+    with pytest.raises(DeadlineExceeded):  # lapsed at admission: never queued
+        svc.submit(workload.vectors[0], deadline_s=0.0)
+    assert len(svc.scheduler) == 0
+
+    h = svc.submit(workload.vectors[0], deadline_s=1e-6)
+    h_ok = svc.submit(workload.vectors[1], deadline_s=60.0)
+    svc.drain()
+    assert h.done and isinstance(h.error, DeadlineExceeded)
+    with pytest.raises(DeadlineExceeded):
+        h.result()
+    assert h_ok.ok and h_ok.error is None
+    assert svc.telemetry.summary()["deadline_expired"] >= 2
+
+    # config default applies when submit() omits deadline_s
+    svc2 = _service(db, workload, query_deadline_s=1e-6)
+    h2 = svc2.submit(workload.vectors[0])
+    svc2.drain()
+    assert isinstance(h2.error, DeadlineExceeded)
+
+
+def test_result_semantics(db, workload):
+    svc = _service(db, workload)
+    h = svc.submit(workload.vectors[0])
+    with pytest.raises(ResultPending):  # non-blocking accessor
+        h.result()
+    with pytest.raises(DeadlineExceeded):  # bounded wait on an unflushed queue
+        h.result(timeout=0.01)
+    svc.drain()
+    ids, scores = h.result()
+    assert ids.shape == (workload.k,) and scores.shape == (workload.k,)
+    ids2, scores2 = h.result(timeout=5.0)  # idempotent accessor
+    np.testing.assert_array_equal(ids, ids2)
+    np.testing.assert_array_equal(scores, scores2)
+
+
+def test_overload_degrade_and_recover(db, workload):
+    """Queue pressure sheds flushes to PQ-approximate scans; hysteresis
+    recovers once the queue drains below the recovery fraction."""
+    svc = _service(
+        db,
+        workload,
+        max_batch=8,
+        overload_queue_depth=16,
+        degraded_refine_factor=4,
+    )
+    svc.index.attach_pq(train_pq(db.vectors, m=4, metric=db.metric))
+    handles = [
+        svc.submit(workload.vectors[i % workload.m]) for i in range(64)
+    ]
+    first = svc.flush()  # post-take depth 56 >> 16: enters degraded
+    assert first == 8
+    assert svc._degraded and svc.health().status == "degraded"
+    assert all(h.degraded for h in handles[:8] if h.ok)
+    svc.drain()  # queue empties; hysteresis exit at depth <= 8
+    assert not svc._degraded and svc.health().status == "ok"
+    assert all(h.done for h in handles)
+    t = svc.telemetry.summary()
+    assert t["degraded_flushes"] >= 1
+    assert t["degraded_transitions"] >= 2  # enter + exit
+
+    # post-recovery answers are exact again (threshold off so the 40-query
+    # parity stream itself doesn't re-trigger the shed)
+    svc.cfg.overload_queue_depth = None
+    got = _stream(svc, workload)
+    assert not any(h.degraded for h in got)
+    exp = _offline(svc, workload)
+    assert_same_results(
+        np.stack([h.scores for h in got]), np.stack([h.ids for h in got]), exp[1], exp[0]
+    )
+
+
+def test_overload_needs_codebook(db, workload):
+    """An index without a codebook never sheds, whatever the pressure."""
+    svc = _service(db, workload, max_batch=8, overload_queue_depth=2)
+    for i in range(32):
+        svc.submit(workload.vectors[i % workload.m])
+    svc.drain()
+    assert not svc._degraded
+    assert svc.telemetry.summary()["degraded_flushes"] == 0
+
+
+def test_health_reports_armed_failpoints(db, workload):
+    svc = _service(db, workload)
+    h = svc.health()
+    assert h.status == "ok" and h.armed_failpoints == ()
+    assert h.wal_synced_seq is None  # in-memory service
+    with failpoints.armed("service.flush", "runtimeerror"):
+        assert "service.flush" in svc.health().armed_failpoints
+    d = svc.health().as_dict()
+    assert d["status"] == "ok" and isinstance(d["armed_failpoints"], list)
+
+
+# ---------------------------------------------------------------------------
+# Chaos: the full seeded invariants run
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_invariants(tmp_path):
+    """>= 200 queries against a live store under randomized (seeded) faults —
+    transient WAL/snapshot/flush/tick errors, an fsync poisoning round, a
+    SIGKILLed writer subprocess — upholding the three standing invariants:
+    every acked write survives recovery, every query terminates, and every
+    non-degraded successful answer exactly matches the offline reference."""
+    cfg = ChaosConfig(seed=0, rounds=4, queries_per_round=50)
+    rep = run_chaos(str(tmp_path), cfg)
+    assert rep.ok, rep.as_dict()
+    assert rep.queries_submitted >= 200
+    assert rep.answered_ok > 0 and rep.writes_acked > 0
+    assert rep.recovery_checks >= 1
+    assert rep.hung == 0
+    assert rep.parity_mismatches == 0
+    assert rep.recovery_violations == 0
+    # fault coverage: >= 5 distinct sites actually fired, including the two
+    # highest-stakes ones (durability fsync and the answer pipeline)
+    assert len(rep.sites_fired) >= 5, rep.sites_fired
+    assert "wal.fsync" in rep.sites_fired
+    assert "service.flush" in rep.sites_fired

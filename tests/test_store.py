@@ -715,7 +715,16 @@ def test_group_commit_fsync_failure_is_not_acknowledged(tmp_path, monkeypatch):
     with pytest.raises(OSError, match="injected"):
         svc.insert(db.vectors[2:4] + 0.01)
 
+    # failing past the retry budget poisons the log: writes fail fast until
+    # the operator heals it (repro.fault quarantine — reads keep serving)
+    assert svc.wal.poisoned is not None
+    from repro.service import ServiceReadOnly
+
+    with pytest.raises(ServiceReadOnly):
+        svc.insert(db.vectors[4:6] + 0.01)
+
     fail["on"] = False
+    svc.wal.clear_poison()
     later = svc.insert(db.vectors[4:6] + 0.01)
     # the failed batch still consumed its id range (its frame is in the log;
     # replay applies it), so the next ack continues above it
