@@ -1,0 +1,76 @@
+"""CI guard for index evolution (rides the bench-smoke job).
+
+    PYTHONPATH=src python -m benchmarks.check_tuner [BENCH_tuner.json]
+
+Fails the build when
+  * any query was dropped or failed across the drift → rebuild → blue/green
+    swap run (``tuner/dropped`` must read exactly 0 — the zero-downtime
+    contract), or
+  * the swap did not pay for itself: post-swap recall@k on the drifted
+    traffic must exceed the frozen layout's by more than
+    ``REPRO_TUNER_MIN_GAIN`` (default 0.0 — strictly better). The pre pass
+    is deliberately nprobe-starved on a layout partitioned for the old mix,
+    so a working rebuild + per-filter retune clears this by a wide margin;
+    a regression in drift reconstruction, the retune ladder, or the
+    per-filter nprobe plumbing lands the gain at or below zero.
+
+Both rows come from seeded, single-process runs — the recall figures are
+deterministic for a given scale, so the gate does not flake with machine
+load the way a QPS floor would.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def check(bench_path: str, min_gain: float) -> list:
+    errors = []
+    with open(bench_path) as f:
+        bench = json.load(f)
+    rows = {r["name"]: r for r in bench.get("rows", [])}
+
+    row = rows.get("tuner/dropped")
+    if row is None:
+        errors.append(f"{bench_path}: no tuner/dropped row")
+    elif float(row["us_per_call"]) != 0.0:
+        errors.append(f"zero-downtime violated: {row['derived']}")
+    else:
+        print("dropped queries across swap: 0  OK")
+
+    def recall_of(name):
+        r = rows.get(name)
+        if r is None:
+            errors.append(f"{bench_path}: no {name} row")
+            return None
+        try:
+            return float(r["derived"].split(" ", 1)[0])
+        except (ValueError, IndexError):
+            errors.append(f"{name}: unparseable derived {r['derived']!r}")
+            return None
+
+    pre, post = recall_of("tuner/pre_recall"), recall_of("tuner/post_recall")
+    if pre is not None and post is not None:
+        gain = post - pre
+        if gain <= min_gain:
+            errors.append(
+                f"swap did not improve recall: pre={pre:.3f} post={post:.3f}"
+                f" gain={gain:+.3f} <= gate {min_gain:+.3f}"
+            )
+        else:
+            print(f"recall gain {gain:+.3f} (pre {pre:.3f} -> post {post:.3f})  OK")
+    return errors
+
+
+def main() -> int:
+    bench_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_tuner.json"
+    min_gain = float(os.environ.get("REPRO_TUNER_MIN_GAIN", "0.0"))
+    errors = check(bench_path, min_gain)
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

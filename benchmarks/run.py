@@ -13,7 +13,9 @@ pq-vs-f32 bytes/recall, serving throughput) is tracked across PRs.
 import os
 import sys
 
-SMOKE_SUITES = ["engine", "kernels", "service", "distributed", "store", "obs", "fault"]
+SMOKE_SUITES = [
+    "engine", "kernels", "service", "distributed", "store", "obs", "fault", "tuner",
+]
 
 
 def main() -> None:
@@ -26,7 +28,7 @@ def main() -> None:
     from . import (
         bench_distributed, bench_engine, bench_fault, bench_fig4_5, bench_fig6,
         bench_fig7, bench_kernels, bench_service, bench_store, bench_table3_4,
-        bench_table5, common,
+        bench_table5, bench_tuner, common,
     )
 
     suites = {
@@ -42,6 +44,7 @@ def main() -> None:
         "store": bench_store.main,
         "obs": bench_service.main_obs,
         "fault": bench_fault.main,
+        "tuner": bench_tuner.main,
     }
     picks = args or list(suites)
     print("name,us_per_call,derived")

@@ -69,11 +69,15 @@ def tune_nprobe(
             qidx = rng.choice(qidx, size=sample_per_template, replace=False)
         sub = workload.subset(qidx)
         sub_truth = SearchResult(ids=truth.ids[qidx], scores=truth.scores[qidx])
+        # double 1, 2, 4, … but clamp the ladder's top rung AT max_nprobe so
+        # the value returned is always one that was actually evaluated — a
+        # non-power-of-two cap (say 100) is probed itself, never returned
+        # sight-unseen after probing only 64
         np_t = 1
-        while np_t <= max_nprobe:
+        while True:
             res = search_fn(sub, {0: np_t})
-            if recall_at_k(res, sub_truth) >= target_recall:
+            if recall_at_k(res, sub_truth) >= target_recall or np_t >= max_nprobe:
                 break
-            np_t *= 2
-        nprobe[ti] = min(np_t, max_nprobe)
+            np_t = min(np_t * 2, max_nprobe)
+        nprobe[ti] = np_t
     return nprobe

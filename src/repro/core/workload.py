@@ -19,7 +19,8 @@ Two families, mirroring Section 6.1:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import Counter
+from typing import Dict, Hashable, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -223,6 +224,65 @@ def kg_style(
 
     return KGDataset(
         db=db, templates=list(templates), selectivities=sels, splits=splits, entity_type_of=type_of
+    )
+
+
+# ---------------------------------------------------------------------------
+# Workload reconstruction from observed traffic (the hot-swap tuner's input)
+# ---------------------------------------------------------------------------
+
+
+def reconstruct_workload(
+    traffic: Sequence[Tuple[float, Hashable]],
+    samples: Iterable[Tuple[np.ndarray, tuple, np.ndarray]] = (),
+    *,
+    fallback_vectors: np.ndarray,
+    n_queries: int = 256,
+    k: int = 10,
+    seed: int = 0,
+) -> Optional[Workload]:
+    """A representative ``Workload`` rebuilt from drift-window observations.
+
+    ``traffic`` is ``DriftMonitor.traffic_snapshot()``'s template window —
+    ``(t, filter-tuple)`` pairs — and ``samples`` its recall reservoir
+    (``(vector, filter, served_ids)``). Template *shares* come from traffic
+    counts; query *vectors* per template come from the reservoir when it
+    sampled that filter, else are drawn from ``fallback_vectors`` (the live
+    DB rows — self-similarity is the standard stand-in when the real query
+    vectors weren't retained). Returns None when the window is empty: no
+    traffic means no evidence to re-partition on.
+
+    Deterministic for a fixed (traffic, samples, seed): templates are
+    ordered by their stringified filter, and every template observed in the
+    window gets at least one query so rare-but-present filters keep their
+    qd-tree say.
+    """
+    counts: Counter = Counter(key for _, key in traffic)
+    if not counts:
+        return None
+    rng = np.random.default_rng(seed)
+    templates = sorted(counts, key=str)
+    total = sum(counts.values())
+    pool: Dict[Hashable, List[np.ndarray]] = {}
+    for vec, filt, _ in samples:
+        pool.setdefault(filt, []).append(np.asarray(vec, dtype=np.float32))
+    fallback = np.asarray(fallback_vectors, dtype=np.float32)
+    vec_chunks: List[np.ndarray] = []
+    t_of: List[int] = []
+    for ti, filt in enumerate(templates):
+        m = max(1, round(n_queries * counts[filt] / total))
+        sampled = pool.get(filt, [])
+        if sampled:
+            picks = rng.integers(0, len(sampled), size=m)
+            vec_chunks.append(np.stack([sampled[j] for j in picks]))
+        else:
+            vec_chunks.append(fallback[rng.integers(0, len(fallback), size=m)])
+        t_of.extend([ti] * m)
+    return Workload(
+        vectors=np.concatenate(vec_chunks, axis=0),
+        templates=list(templates),
+        template_of=np.asarray(t_of, dtype=np.int32),
+        k=int(k),
     )
 
 

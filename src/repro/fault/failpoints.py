@@ -75,6 +75,8 @@ SITES = (
     "service.flush",    # HQIService._flush — the answer pipeline
     "delta.apply",      # DeltaStore.commit_insert — post-WAL state apply
     "scheduler.tick",   # HQIService.tick — the background loop's poll step
+    "tuner.build",      # Tuner._build — off-to-the-side index rebuild
+    "tuner.swap",       # HQIService.swap_index — pre-mutation swap gate
 )
 
 _ERROR_KINDS: Dict[str, Callable[[str], BaseException]] = {

@@ -39,6 +39,10 @@ def main():
     ap.add_argument("--probe-recall", action="store_true",
                     help="replay the answered-query reservoir against a "
                          "brute-force scan (exact recall@k; O(n) per sample)")
+    ap.add_argument("--tune", action="store_true",
+                    help="after the drift report, run one index-evolution "
+                         "cycle: rebuild off to the side on the shifted "
+                         "traffic and blue/green-swap the new generation in")
     args = ap.parse_args()
 
     kg = kg_style(n=args.n, d=args.d, queries_per_split=args.queries, seed=0)
@@ -88,6 +92,29 @@ def main():
     rep = svc.drift_report(probe_recall=args.probe_recall)
     print("== drift ==")
     print(json.dumps(json.loads(rep.to_json()), indent=2))
+
+    if args.tune:
+        from ..tuner import Tuner, TunerConfig
+
+        tuner = Tuner(
+            svc, tmp,
+            cfg=TunerConfig(share_shift=0.2, min_window=32, retune_nprobe=False),
+        )
+        rec = tuner.tune_once()
+        if rec is None:  # shift below threshold at this scale: swap anyway
+            rec = tuner.tune_once(force=True)
+        print("== tuner ==")
+        print(json.dumps({
+            "reason": rec.reason,
+            "generation": rec.generation,
+            "covered_seq": rec.covered_seq,
+            "n_rows": rec.n_rows,
+            "wal_tail_replayed": rec.replayed,
+            "build_s": round(rec.build_s, 4),
+            "swap_s": round(rec.swap_s, 4),
+            "index_swaps": svc.health().index_swaps,
+            "rollback_armed": tuner.can_rollback,
+        }, indent=2))
 
     path = tracer.export(args.trace_out)
     n_events = trace.validate_chrome_trace(tracer.to_chrome_trace())

@@ -88,7 +88,10 @@ class DriftMonitor:
         self._lock = threading.Lock()
         self._queries: deque = deque(maxlen=self.cfg.window)  # (t, template_key)
         self._heat: deque = deque(maxlen=self.cfg.heat_window)  # {part: count}
-        self._growth: deque = deque(maxlen=self.cfg.growth_window)  # (t, rows)
+        # (t, cumulative inserts) — see observe_delta for the fold handling
+        self._growth: deque = deque(maxlen=self.cfg.growth_window)
+        self._growth_base = 0  # rows folded out of the buffer so far
+        self._last_delta_rows = 0  # most recent raw buffer row count
         self._reservoir: List[Tuple[np.ndarray, tuple, np.ndarray]] = []
         self._seen = 0  # queries offered to the reservoir
         self._rng = random.Random(self.cfg.seed)
@@ -111,10 +114,25 @@ class DriftMonitor:
             self._heat.append(dict(part_counts))
 
     def observe_delta(self, rows: int, t: Optional[float] = None) -> None:
-        """Cumulative delta-store row count (monotone between refreshes)."""
+        """Current delta-store row count (the raw buffer size each flush sees).
+
+        The buffer resets to zero at every refresh fold, so the raw series is
+        sawtoothed — differencing it directly would report *negative* growth
+        across a fold. The monitor detects the reset (``rows`` shrank) and
+        maintains a monotone cumulative-inserts series instead: growth over
+        the window is always ≥ 0 and ≈ the true insert rate. (Rows inserted
+        AND folded between two observations are invisible to any sampler and
+        are undercounted; flush-rate sampling keeps that gap negligible.)
+        """
         now = time.monotonic() if t is None else t
+        rows = int(rows)
         with self._lock:
-            self._growth.append((now, int(rows)))
+            if rows < self._last_delta_rows:
+                # fold detected: everything previously buffered left the
+                # delta; rows present now arrived after the fold
+                self._growth_base += self._last_delta_rows
+            self._last_delta_rows = rows
+            self._growth.append((now, self._growth_base + rows))
 
     def maybe_sample(self, vector: np.ndarray, filt: tuple, served_ids: np.ndarray) -> None:
         """Reservoir-sample an answered query for the live recall probe."""
@@ -133,6 +151,35 @@ class DriftMonitor:
                     self._reservoir[j] = entry
 
     # ---------------------------------------------------------------- reading
+
+    def traffic_snapshot(
+        self,
+    ) -> Tuple[
+        List[Tuple[float, Hashable]], List[Tuple[np.ndarray, tuple, np.ndarray]]
+    ]:
+        """(template window, reservoir) — the RAW observations, filter tuples
+        and sampled query vectors intact. ``DriftReport`` stringifies template
+        keys for JSON; workload reconstruction (``core.workload.
+        reconstruct_workload``, consumed by the hot-swap tuner) needs the
+        actual filters back, so it reads this instead."""
+        with self._lock:
+            return list(self._queries), list(self._reservoir)
+
+    def reset(self) -> None:
+        """Forget every observation (window, heat, growth, reservoir).
+
+        Called after an index swap: the retained traffic and served answers
+        describe the *displaced* layout, and a share-shift computed across
+        the swap boundary would immediately re-trigger the tuner on its own
+        rebuild."""
+        with self._lock:
+            self._queries.clear()
+            self._heat.clear()
+            self._growth.clear()
+            self._growth_base = 0
+            self._last_delta_rows = 0
+            self._reservoir = []
+            self._seen = 0
 
     def live_recall(self, service: Any, k: Optional[int] = None) -> Optional[Tuple[float, int, int]]:
         """(recall@k, k, n_samples) replaying the reservoir against a
@@ -192,6 +239,7 @@ class DriftMonitor:
             q = list(self._queries)
             heat = list(self._heat)
             growth = list(self._growth)
+            delta_rows = self._last_delta_rows
         half = len(q) // 2
         older = Counter(key for _, key in q[:half])
         recent = Counter(key for _, key in q[half:])
@@ -207,7 +255,8 @@ class DriftMonitor:
             if heat_total
             else {}
         )
-        delta_rows = growth[-1][1] if growth else 0
+        # growth entries are (t, cumulative inserts) — monotone across folds
+        # (see observe_delta), so the window rate can never go negative
         growth_per_s = 0.0
         if len(growth) >= 2:
             dt = growth[-1][0] - growth[0][0]

@@ -65,7 +65,7 @@ import numpy as np
 
 from ..core.hqi import HQIIndex
 from ..core.ivf import ScanStats
-from ..core.types import VectorDatabase, Workload
+from ..core.types import SETCAT, VectorDatabase, Workload
 from ..fault.failpoints import failpoint
 from ..kernels import ops as kops
 from ..obs.drift import DriftConfig, DriftMonitor, DriftReport
@@ -223,6 +223,11 @@ class ServiceHealth:
     compactor_failures: int
     compactor_error: Optional[str]
     armed_failpoints: Tuple[str, ...] = ()
+    # index-evolution (tuner) status — defaulted so older callers that build
+    # ServiceHealth positionally keep working
+    index_swaps: int = 0
+    tuner_failures: int = 0
+    tuner_error: Optional[str] = None
 
     def as_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
@@ -291,6 +296,12 @@ class HQIService:
         self._last_flush_s = 0.0
         self._last_flush_done: Optional[float] = None
         self._compactor = None  # back-ref set by store.compact.Compactor
+        self._tuner = None  # back-ref set by tuner.Tuner (health/metrics)
+        self._swaps = 0  # completed blue/green index swaps (swap_index)
+        # per-FILTER nprobe overrides installed by the tuner; translated to
+        # per-template dicts flush-locally in _answer (template indices are
+        # interned per batch, so an index-keyed dict can't persist)
+        self._nprobe_by_filter: Optional[Dict[tuple, int]] = None
         # state lock for scheduler + delta + live-mask: writers and the flush
         # snapshot take it BRIEFLY — kernel dispatch happens outside it, so
         # submit()/insert()/delete() never block for a flush's duration
@@ -503,12 +514,14 @@ class HQIService:
             applied_seq = self._applied_seq
             last_done = self._last_flush_done
             last_s = self._last_flush_s
+            swaps = self._swaps
         wal_poison = (
             getattr(self.wal, "poisoned", None) if self.wal is not None else None
         )
         write_error = apply_poison if apply_poison is not None else wal_poison
         read_only = write_error is not None
         comp = self._compactor
+        tun = self._tuner
         tsum = self.telemetry.summary()
         return ServiceHealth(
             status=("read-only" if read_only else "degraded" if degraded else "ok"),
@@ -533,6 +546,13 @@ class HQIService:
                 else repr(comp.last_error)
             ),
             armed_failpoints=tuple(sorted(_fp.list_armed())),
+            index_swaps=swaps,
+            tuner_failures=(0 if tun is None else int(tun.consecutive_failures)),
+            tuner_error=(
+                None
+                if tun is None or tun.last_error is None
+                else repr(tun.last_error)
+            ),
         )
 
     @property
@@ -592,6 +612,169 @@ class HQIService:
                 self._wal_folded_seq = self._applied_seq
                 self.wal.rotate()
             return n
+
+    # ------------------------------------------------------------- hot swap
+
+    def set_nprobe_by_filter(self, mapping: Optional[Dict[tuple, int]]) -> None:
+        """Install (or clear, with None) per-FILTER nprobe overrides.
+
+        ``ServiceConfig.nprobe`` dicts are keyed by template *index*, which
+        is flush-local (the scheduler interns templates per micro-batch), so
+        a tuner's per-template tuning can't persist in that form. The tuner
+        hands over a dict keyed by the filter tuples themselves; ``_answer``
+        translates it per flush. Filters the tuning never saw fall back to
+        the config default.
+        """
+        with self._lock:
+            self._nprobe_by_filter = None if mapping is None else dict(mapping)
+
+    def swap_index(
+        self, index: HQIIndex, live: np.ndarray, covered_seq: int
+    ) -> Tuple[HQIIndex, np.ndarray, int, int]:
+        """Blue/green swap: replace the serving index with one built off to
+        the side, losing no acknowledged write and dropping no query.
+
+        ``index``/``live`` must cover the SAME global-id prefix the serving
+        state had at capture time — ids are row positions, so the builder
+        rebuilds over the full captured DB, dead rows included, and nothing
+        renumbers — and ``covered_seq`` is the highest WAL seq whose effect
+        the build includes. The tail (writes acknowledged after capture) is
+        re-established on the new index before it serves: replayed from the
+        WAL past ``covered_seq`` when one is attached, else adopted from the
+        displaced in-memory view (id-ordered, so the rows past the new
+        index's count are exactly the post-capture inserts).
+
+        Fault containment: the ``tuner.swap`` failpoint, the group-commit
+        drain, and the tail replay all happen BEFORE any serving state is
+        touched — a swap that faults anywhere leaves the old index serving
+        untouched. In-flight flushes finished under the flush lock we hold;
+        queued queries simply answer on the new index at their next flush.
+
+        Returns ``(old_index, old_live, old_covered_seq, n_tail_replayed)``
+        — the first three are exactly the arguments a later ``swap_index``
+        call needs for instant rollback.
+        """
+        with self._flush_lock, get_tracer().span("service.swap"):
+            failpoint("tuner.swap")
+            with self._commit_cv:
+                # Drain the group-commit pipeline: a writer that staged its
+                # WAL record but hasn't applied yet would otherwise apply
+                # into the delta we're about to retire — and the replay
+                # below reads the WAL file, which already holds its frame,
+                # so the write would land twice.
+                while self._commit_head != self._commit_tail:
+                    self._commit_cv.wait()
+                new_live = np.array(live, dtype=bool, copy=True)
+                delta = DeltaStore(
+                    index.db,
+                    first_id=index.db.n,
+                    pq=(
+                        index.pq
+                        if self.cfg.delta_pq_threshold is not None
+                        else None
+                    ),
+                )
+                if self.wal is not None:
+                    replayed = self._replay_tail(delta, new_live, covered_seq)
+                else:
+                    replayed = self._adopt_tail(delta, new_live)
+                # ---- point of no return: mutate serving state atomically
+                old_index, old_live = self.index, self._live
+                old_seq = self._wal_folded_seq
+                self.index = index
+                self._live = new_live
+                self.delta = delta
+                if self.wal is not None:
+                    self._wal_folded_seq = covered_seq
+                # stale router bitmaps / arena views from a previous serving
+                # stint (rollback) must not survive the swap; a fresh build
+                # just rebuilds lazily on first flush
+                self.index.invalidate_caches()
+                self._swaps += 1
+            self.telemetry.record_swap()
+            get_registry().counter("service.index_swaps").inc(1)
+            # retained drift traffic describes the displaced layout — a
+            # share-shift computed across the swap boundary would immediately
+            # re-trigger the tuner on its own rebuild
+            self.drift.reset()
+        return old_index, old_live, old_seq, replayed
+
+    def _replay_tail(
+        self, delta: DeltaStore, live: np.ndarray, after_seq: int
+    ) -> int:
+        """Replay acked WAL records past ``after_seq`` into a swap-candidate
+        (delta, live) pair; returns #records. Caller holds both locks with
+        the commit pipeline drained, so the log holds no staged-but-unapplied
+        frame. Same transitions as recovery's ``replay_into``, including the
+        id-continuity check: the first replayed insert must land exactly at
+        the new index's row count, or the build captured a different id
+        space than the log describes."""
+        # lazy: store.recovery imports this module at its own import time
+        from ..store.recovery import RecoveryError
+        from ..store.wal import KIND_DELETE, KIND_INSERT, split_insert_arrays
+
+        n = 0
+        for rec in self.wal.replay(after_seq):
+            if rec.kind == KIND_INSERT:
+                vectors, ids, columns, null_masks = split_insert_arrays(
+                    rec.arrays
+                )
+                got = delta.insert(vectors, columns or None, null_masks or None)
+                if not np.array_equal(got, ids):
+                    raise RecoveryError(
+                        f"swap replay diverged at WAL record {rec.seq}: "
+                        f"ids {got.tolist()} != committed {ids.tolist()}"
+                    )
+            elif rec.kind == KIND_DELETE:
+                for ext_id in np.atleast_1d(
+                    np.asarray(rec.arrays["ids"], dtype=np.int64)
+                ):
+                    ext_id = int(ext_id)
+                    if 0 <= ext_id < len(live):
+                        live[ext_id] = False
+                    else:
+                        delta.delete(ext_id)
+            else:
+                raise RecoveryError(
+                    f"swap replay: WAL record {rec.seq} has unknown kind "
+                    f"{rec.kind}"
+                )
+            n += 1
+        return n
+
+    def _adopt_tail(self, delta: DeltaStore, live: np.ndarray) -> int:
+        """No-WAL swap tail: carry post-capture writes from the serving
+        in-memory view into a swap candidate; returns #rows adopted.
+
+        The full view (indexed rows + delta rows) is id-ordered, so rows at
+        positions >= the new index's row count are exactly the inserts the
+        build didn't capture; post-capture deletes are wherever the serving
+        masks went dead."""
+        cut = delta.first_id  # == the new index's db.n
+        cur_db, cur_live = self.delta.snapshot()
+        full_db = (
+            self.index.db
+            if cur_db is None
+            else VectorDatabase.concat(self.index.db, cur_db)
+        )
+        full_live = np.concatenate([self._live, cur_live])
+        # deletes over rows the new index holds fold into its live mask
+        m = min(len(live), len(full_live))
+        np.logical_and(live[:m], full_live[:m], out=live[:m])
+        if full_db.n <= cut:
+            return 0
+        tail = full_db.take(np.arange(cut, full_db.n))
+        cols: Dict[str, np.ndarray] = {}
+        nms: Dict[str, np.ndarray] = {}
+        for name, c in tail.columns.items():
+            cols[name] = c.values
+            if c.kind != SETCAT and c.null_mask is not None:
+                nms[name] = c.null_mask
+        got = delta.insert(tail.vectors, cols or None, nms or None)
+        assert int(got[0]) == cut, "adopted tail broke id continuity"
+        for gid in cut + np.nonzero(~full_live[cut:])[0]:
+            delta.delete(int(gid))
+        return int(full_db.n - cut)
 
     # ---------------------------------------------------------- serving loop
 
@@ -822,10 +1005,20 @@ class HQIService:
             if degraded
             else {}
         )
+        nprobe: Union[int, Dict[int, int]] = self.cfg.nprobe
+        by_filter = self._nprobe_by_filter
+        if by_filter is not None:
+            # tuner overrides are keyed by filter tuple; template indices are
+            # interned per batch, so translate for THIS flush's workload
+            default = nprobe if isinstance(nprobe, int) else 8
+            nprobe = {
+                ti: by_filter.get(filt, default)
+                for ti, filt in enumerate(wl.templates)
+            }
         with tracer.span("engine.search", m=wl.m):
             res = self.index.search(
                 wl,
-                nprobe=self.cfg.nprobe,
+                nprobe=nprobe,
                 batch_vec=self.cfg.batch_vec,
                 live_mask=live,
                 **scan_kw,

@@ -61,6 +61,7 @@ class ServiceTelemetry:
         self._degraded_flushes = 0
         self._degraded_transitions = 0
         self._loop_errors = 0
+        self._index_swaps = 0
 
     # ------------------------------------------------------------- recording
 
@@ -124,6 +125,11 @@ class ServiceTelemetry:
         with self._lock:
             self._loop_errors += 1
 
+    def record_swap(self) -> None:
+        """One completed blue/green index swap (HQIService.swap_index)."""
+        with self._lock:
+            self._index_swaps += 1
+
     # --------------------------------------------------------------- reading
 
     @staticmethod
@@ -166,6 +172,7 @@ class ServiceTelemetry:
                 "degraded_flushes": float(self._degraded_flushes),
                 "degraded_transitions": float(self._degraded_transitions),
                 "loop_errors": float(self._loop_errors),
+                "index_swaps": float(self._index_swaps),
             }
         lats.sort()
         out["p50_latency_s"] = self._rank(lats, 50.0) if lats else 0.0

@@ -5,6 +5,8 @@ Public API:
         generations of a full ``HQIIndex`` (+ live mask), mmap'd zero-copy
         on load; build_state / write_generation split capture from blob I/O
     list_generations / prune_generations — generation lifecycle
+    current_generation / set_current / pin_generation / unpin_generation /
+        pinned_generations — blue/green promotion + rollback-target pinning
     WriteAheadLog / WalRecord — append-only commit log for serving writes
     init_store / open_service / replay_into — bootstrap + crash recovery
     Compactor — background fold → snapshot → prune loop
@@ -21,10 +23,15 @@ from .snapshot import (  # noqa: F401
     Snapshot,
     SnapshotError,
     build_state,
+    current_generation,
     list_generations,
     load_snapshot,
+    pin_generation,
+    pinned_generations,
     prune_generations,
     save_snapshot,
+    set_current,
+    unpin_generation,
     write_generation,
 )
 from .wal import (  # noqa: F401

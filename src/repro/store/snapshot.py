@@ -35,8 +35,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Set
 
 import numpy as np
 
@@ -52,6 +53,14 @@ VERSION = 1
 
 _GEN_PREFIX = "gen-"
 _ARRAY_KEY = "__npy__"
+_PINNED_FILE = "PINNED"
+
+# One process may run several generation writers (the background compactor
+# AND the index-evolution tuner): serialize name allocation + the final
+# rename so two concurrent saves can't both claim gen-N. Blob streaming
+# happens inside too — both writers are background work, and serial writes
+# beat interleaved disk traffic.
+_WRITE_LOCK = threading.Lock()
 
 
 # ---------------------------------------------------------------------------
@@ -198,13 +207,38 @@ def save_snapshot(
     return write_generation(root, build_state(index, live), wal_seq=wal_seq)
 
 
-def write_generation(root: str, state: Dict[str, Any], *, wal_seq: int = 0) -> str:
-    """Persist a captured state tree as the next generation (crash-safe)."""
+def write_generation(
+    root: str,
+    state: Dict[str, Any],
+    *,
+    wal_seq: int = 0,
+    meta: Optional[Dict[str, Any]] = None,
+    set_current: bool = True,
+) -> str:
+    """Persist a captured state tree as the next generation (crash-safe).
+
+    ``meta`` stamps free-form provenance into the manifest (the tuner records
+    its trigger reason there). ``set_current=False`` writes the generation
+    WITHOUT flipping ``CURRENT`` — the blue/green pattern: the tuner persists
+    the candidate layout first and promotes it (``set_current()``) only after
+    the in-memory swap succeeded, so a failed swap leaves restarts loading
+    the generation that matches what is actually serving.
+    """
     with get_tracer().span("snapshot.write", wal_seq=int(wal_seq)):
-        return _write_generation(root, state, wal_seq=wal_seq)
+        with _WRITE_LOCK:
+            return _write_generation(
+                root, state, wal_seq=wal_seq, meta=meta, set_current=set_current
+            )
 
 
-def _write_generation(root: str, state: Dict[str, Any], *, wal_seq: int = 0) -> str:
+def _write_generation(
+    root: str,
+    state: Dict[str, Any],
+    *,
+    wal_seq: int = 0,
+    meta: Optional[Dict[str, Any]] = None,
+    set_current: bool = True,
+) -> str:
     os.makedirs(root, exist_ok=True)
     gens = list_generations(root)
     gen = (_gen_number(gens[-1]) + 1) if gens else 1
@@ -227,6 +261,8 @@ def _write_generation(root: str, state: Dict[str, Any], *, wal_seq: int = 0) -> 
         "wal_seq": int(wal_seq),
         "state": tree,
     }
+    if meta is not None:
+        manifest["meta"] = meta
 
     arrays_dir = os.path.join(tmp_dir, "arrays")
     os.makedirs(arrays_dir)
@@ -259,8 +295,70 @@ def _write_generation(root: str, state: Dict[str, Any], *, wal_seq: int = 0) -> 
     _fsync_dir(tmp_dir)
     os.replace(tmp_dir, final_dir)
     _fsync_dir(root)
-    _atomic_write(os.path.join(root, "CURRENT"), name + "\n")
+    if set_current:
+        _atomic_write(os.path.join(root, "CURRENT"), name + "\n")
     return name
+
+
+def current_generation(root: str) -> Optional[str]:
+    """The generation name ``CURRENT`` points at, or None."""
+    cpath = os.path.join(root, "CURRENT")
+    if not os.path.isfile(cpath):
+        return None
+    with open(cpath) as f:
+        name = f.read().strip()
+    return name or None
+
+
+def set_current(root: str, name: str) -> None:
+    """Atomically repoint ``CURRENT`` at an existing, complete generation.
+
+    The promotion half of a blue/green save (``write_generation(...,
+    set_current=False)``) — and the demotion half of a rollback.
+    """
+    if _validate_generation(root, name) is None:
+        raise SnapshotError(f"cannot promote {name!r}: not a loadable generation")
+    _atomic_write(os.path.join(root, "CURRENT"), name + "\n")
+
+
+# ---------------------------------------------------------------------------
+# Pinning — generations retention must not collect (rollback targets)
+# ---------------------------------------------------------------------------
+
+
+def pinned_generations(root: str) -> Set[str]:
+    """Generation names listed in ``<root>/PINNED`` (one per line)."""
+    path = os.path.join(root, _PINNED_FILE)
+    if not os.path.isfile(path):
+        return set()
+    with open(path) as f:
+        return {line.strip() for line in f if line.strip()}
+
+
+def _write_pinned(root: str, names: Set[str]) -> None:
+    path = os.path.join(root, _PINNED_FILE)
+    if not names:
+        if os.path.isfile(path):
+            os.remove(path)
+            _fsync_dir(root)
+        return
+    _atomic_write(path, "".join(n + "\n" for n in sorted(names)))
+
+
+def pin_generation(root: str, name: str) -> None:
+    """Shield ``name`` from ``prune_generations`` until unpinned.
+
+    Durable (a ``PINNED`` file beside ``CURRENT``), so every pruner in every
+    process respects it — the tuner pins the displaced generation after a
+    swap so instant rollback survives however many compaction cycles run
+    in between.
+    """
+    _write_pinned(root, pinned_generations(root) | {name})
+
+
+def unpin_generation(root: str, name: str) -> None:
+    """Release a pin; a no-op when ``name`` was not pinned."""
+    _write_pinned(root, pinned_generations(root) - {name})
 
 
 def _validate_generation(root: str, name: str) -> Optional[dict]:
@@ -346,21 +444,29 @@ def _load_snapshot(root: str, *, mmap: bool = True) -> Snapshot:
     )
 
 
-def prune_generations(root: str, keep: int = 2) -> List[str]:
+def prune_generations(
+    root: str, keep: int = 2, *, pinned: Iterable[str] = ()
+) -> List[str]:
     """Delete all but the newest ``keep`` generations; returns deleted names.
 
-    Never deletes the generation ``CURRENT`` points at (even if older ones
-    would be kept instead — CURRENT is what a concurrent loader follows).
+    ``keep=0`` prunes *everything* except the survivors below (it used to be
+    a silent no-op, which let "prune all history" calls leak disk forever).
+    Negative ``keep`` raises ``ValueError``.
+
+    Never deletes: the generation ``CURRENT`` points at (what a concurrent
+    loader follows), names passed via ``pinned``, or names recorded in the
+    on-disk ``PINNED`` file (the tuner's rollback targets — see
+    ``pin_generation``).
     """
     import shutil
 
+    if keep < 0:
+        raise ValueError(f"keep must be >= 0, got {keep}")
     gens = list_generations(root)
-    current = None
-    cpath = os.path.join(root, "CURRENT")
-    if os.path.isfile(cpath):
-        with open(cpath) as f:
-            current = f.read().strip()
-    doomed = [g for g in gens[:-keep] if g != current] if keep > 0 else []
+    current = current_generation(root)
+    pins = set(pinned) | pinned_generations(root)
+    cut = gens if keep == 0 else gens[:-keep]
+    doomed = [g for g in cut if g != current and g not in pins]
     for name in doomed:
         shutil.rmtree(os.path.join(root, name), ignore_errors=True)
     # sweep stale stages too

@@ -162,6 +162,11 @@ class WriteAheadLog:
         # backoff + jitter between them) poisons the log — see ``poisoned``
         self.fsync_retries = max(1, int(fsync_retries))
         self.poisoned: Optional[BaseException] = None
+        # retention floor: while set, prune() keeps every record with
+        # seq > pin_seq on disk. The index-evolution tuner pins the seq its
+        # off-to-the-side build covers so the compactor can't collect the
+        # tail the blue/green swap still has to replay.
+        self.pin_seq: Optional[int] = None
         os.makedirs(path, exist_ok=True)
         self._fh: Optional[io.BufferedWriter] = None
         self._seg: Optional[str] = None
@@ -451,8 +456,12 @@ class WriteAheadLog:
 
         A segment is deletable when every record it holds has
         seq <= ``upto_seq`` — i.e. the NEXT segment starts at or below
-        ``upto_seq + 1`` — and it is not the open segment.
+        ``upto_seq + 1`` — and it is not the open segment. ``pin_seq``
+        (when set) clamps the horizon so records a pending swap must replay
+        survive any concurrent pruner.
         """
+        if self.pin_seq is not None:
+            upto_seq = min(int(upto_seq), int(self.pin_seq))
         segs = self.segments()
         doomed: List[str] = []
         for i, name in enumerate(segs):

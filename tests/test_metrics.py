@@ -2,7 +2,7 @@
 import numpy as np
 
 from repro.core import recall_at_k
-from repro.core.metrics import per_template_recall
+from repro.core.metrics import per_template_recall, tune_nprobe
 from repro.core.types import SearchResult, Workload
 
 
@@ -51,6 +51,76 @@ def test_recall_result_k_differs_from_truth_k():
     tru = _random_results(rng, 20, 5)
     wide = SearchResult(ids=res.ids[:, :5], scores=res.scores[:, :5])
     assert recall_at_k(res, tru) >= recall_at_k(wide, tru)
+
+
+def _unreachable_search_fn(probed):
+    """A search that never reaches the recall target; records every nprobe
+    it was asked to evaluate."""
+
+    def fn(sub, nprobe_map):
+        (npv,) = nprobe_map.values()
+        probed.append(int(npv))
+        m = sub.m
+        return SearchResult(
+            ids=np.full((m, sub.k), -2 - npv, np.int64),  # never matches truth
+            scores=np.zeros((m, sub.k), np.float32),
+        )
+
+    return fn
+
+
+def test_tune_nprobe_never_returns_unprobed_value():
+    """Regression: the doubling search probed 1,2,4,... then returned
+    ``min(np_t, max_nprobe)`` — a non-power-of-two cap (100) came back
+    UNTESTED after only 64 was evaluated. Every returned nprobe must have
+    been evaluated."""
+    m, k = 8, 3
+    wl = Workload(
+        vectors=np.zeros((m, 4), np.float32),
+        templates=[()],
+        template_of=np.zeros(m, np.int32),
+        k=k,
+    )
+    truth = SearchResult(
+        ids=np.arange(m * k, dtype=np.int64).reshape(m, k),
+        scores=np.zeros((m, k), np.float32),
+    )
+    probed = []
+    got = tune_nprobe(
+        _unreachable_search_fn(probed), wl, truth, target_recall=0.9, max_nprobe=100
+    )
+    assert got[0] == 100  # the cap is returned when recall is unreachable...
+    assert 100 in probed  # ...and it was actually evaluated, not clamped in
+    assert all(v in probed for v in got.values())
+    # power-of-two caps keep the original ladder behavior
+    probed2 = []
+    got2 = tune_nprobe(
+        _unreachable_search_fn(probed2), wl, truth, target_recall=0.9, max_nprobe=64
+    )
+    assert got2[0] == 64 and probed2 == [1, 2, 4, 8, 16, 32, 64]
+
+
+def test_tune_nprobe_stops_at_target():
+    """The ladder still stops at the first nprobe reaching the target."""
+    m, k = 4, 2
+    wl = Workload(
+        vectors=np.zeros((m, 4), np.float32),
+        templates=[()],
+        template_of=np.zeros(m, np.int32),
+        k=k,
+    )
+    truth = SearchResult(
+        ids=np.arange(m * k, dtype=np.int64).reshape(m, k),
+        scores=np.zeros((m, k), np.float32),
+    )
+
+    def fn(sub, nprobe_map):
+        (npv,) = nprobe_map.values()
+        ids = truth.ids if npv >= 4 else np.full((m, k), -1, np.int64)
+        return SearchResult(ids=ids, scores=np.zeros((m, k), np.float32))
+
+    got = tune_nprobe(fn, wl, truth, target_recall=0.8, max_nprobe=100)
+    assert got[0] == 4
 
 
 def test_per_template_recall_matches_per_slice():

@@ -308,6 +308,64 @@ def test_drift_heat_and_growth():
     assert rep.delta_growth_per_s == pytest.approx(50.0)
 
 
+def test_drift_growth_nonnegative_across_fold():
+    """Regression: the raw delta row count resets to 0 at every refresh fold,
+    so differencing it reported NEGATIVE growth across a fold. The monitor
+    now keeps a monotone cumulative-inserts series: growth stays >= 0 and
+    matches the true insert rate over the window."""
+    mon = DriftMonitor()
+    mon.observe_delta(100, t=0.0)  # 100 rows buffered
+    mon.observe_delta(0, t=1.0)  # fold mid-window: buffer emptied
+    mon.observe_delta(50, t=2.0)  # 50 more arrive after the fold
+    rep = mon.report()
+    assert rep.delta_rows == 50  # report still shows the raw buffer size
+    assert rep.delta_growth_per_s >= 0.0
+    # 50 net new rows arrived over the 2 s window after the first sample
+    assert rep.delta_growth_per_s == pytest.approx(25.0)
+    # consecutive folds and same-size re-fills stay monotone too
+    mon.observe_delta(0, t=3.0)
+    mon.observe_delta(50, t=4.0)
+    assert mon.report().delta_growth_per_s == pytest.approx(25.0)
+
+
+def test_drift_growth_nonnegative_through_service_fold():
+    """Same regression through the real service: insert → flush → refresh
+    (buffer resets) → insert → flush must never report negative growth."""
+    db = small_db(n=600)
+    wl = small_workload(db, n_queries=10)
+    svc = _exact_service(db, wl)
+    rng = np.random.default_rng(7)
+
+    def one_round():
+        svc.insert(rng.normal(size=(30, db.d)).astype(np.float32))
+        for i in range(4):
+            svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+        svc.drain()
+
+    one_round()
+    svc.refresh()  # fold: the delta row count the next flush sees resets to 0
+    one_round()
+    rep = svc.drift_report()
+    assert rep.delta_growth_per_s >= 0.0
+
+
+def test_drift_traffic_snapshot_and_reset():
+    mon = DriftMonitor(DriftConfig(window=16, reservoir=4))
+    mon.observe_queries([("f", 1), ("f", 2)], t=1.0)
+    mon.maybe_sample(np.ones(4, np.float32), ("f", 1), np.array([3]))
+    traffic, samples = mon.traffic_snapshot()
+    # raw filter tuples intact (report() stringifies them; reconstruction
+    # needs the originals)
+    assert [k for _, k in traffic] == [("f", 1), ("f", 2)]
+    assert samples[0][1] == ("f", 1)
+    mon.observe_delta(10, t=0.0)
+    mon.reset()
+    traffic, samples = mon.traffic_snapshot()
+    assert traffic == [] and samples == []
+    rep = mon.report()
+    assert rep.n_window == 0 and rep.delta_rows == 0
+
+
 def test_drift_reservoir_bounded_and_deterministic():
     cfg = DriftConfig(reservoir=8, seed=0)
     a, b = DriftMonitor(cfg), DriftMonitor(cfg)

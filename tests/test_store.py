@@ -30,8 +30,11 @@ from repro.store import (
     list_generations,
     load_snapshot,
     open_service,
+    pin_generation,
+    pinned_generations,
     prune_generations,
     save_snapshot,
+    unpin_generation,
 )
 from repro.store.wal import _HEADER, _MAGIC
 
@@ -179,6 +182,32 @@ def test_generation_fallback_and_prune(tmp_path):
     prune_generations(str(tmp_path), keep=1)
     assert list_generations(str(tmp_path)) == ["gen-000004"]
     assert load_snapshot(str(tmp_path)).generation == 4
+
+
+def test_prune_keep_zero_and_pins(tmp_path):
+    """Regression: ``keep=0`` silently deleted NOTHING despite the "all but
+    the newest keep" contract. It now prunes everything except CURRENT and
+    pinned generations; negative keep raises."""
+    import pytest
+
+    _, wl, hqi = _build(n=600, n_queries=8)
+    for _ in range(4):
+        save_snapshot(tmp_path, hqi)  # gen 1..4; CURRENT -> gen-000004
+    root = str(tmp_path)
+    with pytest.raises(ValueError):
+        prune_generations(root, keep=-1)
+    # pinned generations survive any keep (the tuner's rollback target)
+    pin_generation(root, "gen-000002")
+    assert pinned_generations(root) == {"gen-000002"}
+    doomed = prune_generations(root, keep=0)
+    assert sorted(doomed) == ["gen-000001", "gen-000003"]
+    assert list_generations(root) == ["gen-000002", "gen-000004"]
+    assert load_snapshot(root).generation == 4  # CURRENT untouched
+    # explicit pinned= argument works too; unpinning re-exposes to pruning
+    unpin_generation(root, "gen-000002")
+    assert prune_generations(root, keep=0, pinned=("gen-000002",)) == []
+    assert prune_generations(root, keep=0) == ["gen-000002"]
+    assert list_generations(root) == ["gen-000004"]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,368 @@
+"""Index-evolution tuner: drift-triggered rebuild + blue/green hot swap.
+
+The load-bearing guarantees under test:
+
+  * a mid-stream template shift trips the tuner, which rebuilds the layout
+    off to the side and swaps it in with ZERO dropped queries — post-swap
+    answers still exactly equal an unswapped reference in exhaustive mode,
+    because global ids are row positions and the rebuild covers the full
+    captured row space (dead rows included, nothing renumbers);
+  * writes acknowledged between capture and swap survive: the WAL tail past
+    the build's covered seq replays into the fresh delta with bit-exact id
+    continuity (and crash recovery from the promoted generation reproduces
+    the same state);
+  * a faulted build or swap (``tuner.build`` / ``tuner.swap`` failpoints)
+    leaves the old index serving untouched and ``CURRENT`` unflipped;
+  * ``rollback()`` restores the displaced layout without losing writes
+    acknowledged after the forward swap.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import HQIConfig, HQIIndex
+from repro.core.workload import reconstruct_workload
+from repro.fault import failpoints
+from repro.obs.drift import DriftReport
+from repro.service import HQIService, ServiceConfig
+from repro.store import init_store, list_generations, open_service
+from repro.store.snapshot import current_generation, pinned_generations
+from repro.tuner import Tuner, TunerConfig
+
+from conftest import assert_same_results, small_db, small_workload
+
+EXACT = 10_000  # nprobe past every list count: search becomes exact
+
+
+def _build_index(db, wl):
+    return HQIIndex.build(db, wl, HQIConfig(min_partition_size=128, max_leaves=16))
+
+
+def _service(db, wl, **cfg_kw):
+    kw = dict(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0)
+    kw.update(cfg_kw)
+    return HQIService(_build_index(db, wl), ServiceConfig(**kw))
+
+
+def _stream(svc, wl, rows=None):
+    rows = range(wl.m) if rows is None else rows
+    handles = [
+        svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]]) for i in rows
+    ]
+    svc.drain()
+    assert all(h.ok for h in handles)  # zero dropped / failed queries
+    return np.stack([h.ids for h in handles]), np.stack([h.scores for h in handles])
+
+
+def _report(**over):
+    base = dict(
+        n_window=500,
+        window_span_s=10.0,
+        template_shares={},
+        reference_shares={},
+        share_shift=0.0,
+        part_heat={},
+        delta_rows=0,
+        delta_growth_per_s=0.0,
+    )
+    base.update(over)
+    return DriftReport(**base)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: shift → trigger → rebuild → swap, zero drops, exact parity
+# ---------------------------------------------------------------------------
+
+
+def test_shift_triggers_swap_with_exact_parity_and_zero_drops():
+    db = small_db(n=1500, seed=5)
+    wl = small_workload(db, n_queries=48)
+    svc = _service(db, wl)
+    ref = _service(db, wl)  # never swapped — the parity reference
+    tuner = Tuner(
+        svc, cfg=TunerConfig(min_window=32, share_shift=0.5, retune_nprobe=False)
+    )
+    assert tuner.tune_once() is None  # stationary start: no trigger
+
+    rows_a = np.where(wl.template_of <= 2)[0]
+    rows_b = np.where(wl.template_of >= 3)[0]
+    _stream(svc, wl, np.repeat(rows_a, 2))  # phase A traffic
+    _stream(svc, wl, np.repeat(rows_b, 2))  # phase B: near-disjoint mix
+    rec = tuner.tune_once()
+    assert rec is not None and rec.reason == "share-shift"
+    assert rec.n_rows == db.n and rec.swap_s >= 0.0
+
+    # the swap is visible in health + telemetry, and the drift window was
+    # reset so the tuner doesn't immediately re-trigger on its own rebuild
+    assert svc.health().index_swaps == 1
+    assert svc.telemetry.summary()["index_swaps"] == 1.0
+    assert svc.drift_report().n_window == 0
+    assert tuner.tune_once() is None
+
+    # exhaustive-mode answers on the new layout == the unswapped reference
+    s_ids, s_scores = _stream(svc, wl)
+    r_ids, r_scores = _stream(ref, wl)
+    assert_same_results(s_scores, s_ids, r_scores, r_ids)
+
+
+def test_swap_preserves_inflight_queued_queries():
+    """Queries queued (not yet flushed) across the swap are answered on the
+    new index — none dropped, answers still exact."""
+    db = small_db(n=900, seed=2)
+    wl = small_workload(db, n_queries=24)
+    svc = _service(db, wl, max_batch=1000, deadline_s=1000.0)  # nothing auto-flushes
+    ref = _service(db, wl)
+    tuner = Tuner(svc, cfg=TunerConfig(retune_nprobe=False))
+    handles = [
+        svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]]) for i in range(wl.m)
+    ]
+    assert not any(h.done for h in handles)  # still queued
+    rec = tuner.tune_once(force=True)
+    assert rec is not None
+    svc.drain()
+    assert all(h.ok for h in handles)
+    s_ids = np.stack([h.ids for h in handles])
+    s_scores = np.stack([h.scores for h in handles])
+    r_ids, r_scores = _stream(ref, wl)
+    assert_same_results(s_scores, s_ids, r_scores, r_ids)
+
+
+# ---------------------------------------------------------------------------
+# WAL-seq continuity: acked writes between capture and swap replay bit-exact
+# ---------------------------------------------------------------------------
+
+
+def test_scripted_swap_wal_continuity_bit_identical(tmp_path):
+    db = small_db(n=900, seed=3)
+    wl = small_workload(db, n_queries=24)
+    rng = np.random.default_rng(9)
+    svc = init_store(
+        str(tmp_path), _build_index(db, wl),
+        cfg=ServiceConfig(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0),
+    )
+    ref = _service(db, wl)  # same writes, never swapped
+    tuner = Tuner(svc, str(tmp_path), cfg=TunerConfig(retune_nprobe=False))
+
+    v1 = rng.normal(size=(5, db.d)).astype(np.float32)
+    ids1 = svc.insert(v1)
+    np.testing.assert_array_equal(ids1, ref.insert(v1))
+    built = tuner._build("forced")  # capture includes ids1
+    assert built.covered_seq == svc._applied_seq
+    assert built.index.db.n == db.n + 5  # dead rows included, ids preserved
+
+    # acked writes AFTER capture, BEFORE swap — the tail the swap must replay
+    v2 = rng.normal(size=(4, db.d)).astype(np.float32)
+    ids2 = svc.insert(v2)
+    np.testing.assert_array_equal(ids2, ref.insert(v2))
+    dels = [int(ids1[0]), 7]
+    assert svc.delete(dels) == ref.delete(dels) == 2
+
+    rec = tuner._swap(built)
+    assert rec.replayed == 2  # one insert record + one delete record
+    assert svc._wal_folded_seq == built.covered_seq  # seq continuity
+    np.testing.assert_array_equal(np.sort(svc.live_ids()), np.sort(ref.live_ids()))
+
+    # id continuity for NEW writes across the swap boundary
+    v3 = rng.normal(size=(2, db.d)).astype(np.float32)
+    np.testing.assert_array_equal(svc.insert(v3), ref.insert(v3))
+
+    # answers bit-identical to the unswapped reference (exhaustive mode)
+    s_ids, s_scores = _stream(svc, wl)
+    r_ids, r_scores = _stream(ref, wl)
+    assert_same_results(s_scores, s_ids, r_scores, r_ids)
+
+    # crash recovery from the promoted generation reproduces the same state
+    svc2 = open_service(
+        str(tmp_path),
+        cfg=ServiceConfig(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0),
+    )
+    np.testing.assert_array_equal(np.sort(svc2.live_ids()), np.sort(ref.live_ids()))
+    s2_ids, s2_scores = _stream(svc2, wl)
+    assert_same_results(s2_scores, s2_ids, r_scores, r_ids)
+
+
+def test_swap_under_concurrent_inserts_loses_no_acked_write(tmp_path):
+    db = small_db(n=700, seed=4)
+    wl = small_workload(db, n_queries=12)
+    svc = init_store(
+        str(tmp_path), _build_index(db, wl),
+        cfg=ServiceConfig(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0),
+    )
+    tuner = Tuner(svc, str(tmp_path), cfg=TunerConfig(retune_nprobe=False))
+    rng = np.random.default_rng(11)
+    acked, stop = [], threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            ids = svc.insert(rng.normal(size=(1, db.d)).astype(np.float32))
+            acked.extend(int(i) for i in ids)
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        while len(acked) < 5:
+            time.sleep(0.001)
+        rec = tuner.tune_once(force=True)
+    finally:
+        stop.set()
+        t.join()
+    assert rec is not None
+    live = set(int(i) for i in svc.live_ids())
+    assert set(acked) <= live  # every acknowledged insert survived the swap
+    assert len(acked) == len(set(acked))  # and no id was handed out twice
+    _stream(svc, wl)  # still serving, zero drops
+    # recovery agrees
+    svc2 = open_service(str(tmp_path))
+    assert set(acked) <= set(int(i) for i in svc2.live_ids())
+
+
+# ---------------------------------------------------------------------------
+# fault containment: a faulted build/swap leaves the old index serving
+# ---------------------------------------------------------------------------
+
+
+def test_build_failpoint_leaves_old_index_serving():
+    db = small_db(n=700, seed=6)
+    wl = small_workload(db, n_queries=12)
+    svc = _service(db, wl)
+    old_index = svc.index
+    tuner = Tuner(svc, cfg=TunerConfig(retune_nprobe=False))
+    with failpoints.armed("tuner.build", "runtimeerror"):
+        with pytest.raises(RuntimeError):
+            tuner.tune_once(force=True)
+    assert svc.index is old_index  # nothing mutated
+    assert svc.health().index_swaps == 0
+    assert tuner.consecutive_failures == 1
+    assert svc.health().tuner_failures == 1
+    assert "RuntimeError" in svc.health().tuner_error
+    _stream(svc, wl)  # still serving
+    # the fault was transient: the next cycle succeeds and health heals
+    assert tuner.tune_once(force=True) is not None
+    assert tuner.consecutive_failures == 0 and tuner.last_error is None
+
+
+def test_swap_failpoint_leaves_current_unflipped_then_retry_succeeds(tmp_path):
+    db = small_db(n=700, seed=7)
+    wl = small_workload(db, n_queries=12)
+    svc = init_store(
+        str(tmp_path), _build_index(db, wl),
+        cfg=ServiceConfig(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0),
+    )
+    old_index = svc.index
+    tuner = Tuner(svc, str(tmp_path), cfg=TunerConfig(retune_nprobe=False))
+    ids = svc.insert(np.random.default_rng(0).normal(size=(3, db.d)).astype(np.float32))
+    with failpoints.armed("tuner.swap", "oserror", count=1):
+        with pytest.raises(OSError):
+            tuner.tune_once(force=True)
+    # old index serving, blue/green candidate written but NOT promoted — a
+    # restart here loads the layout that matches what is actually serving
+    assert svc.index is old_index
+    assert current_generation(str(tmp_path)) == "gen-000001"
+    assert len(list_generations(str(tmp_path))) == 2  # candidate parked on disk
+    assert set(int(i) for i in ids) <= set(int(i) for i in svc.live_ids())
+    _stream(svc, wl)
+    rec = tuner.tune_once(force=True)  # failpoint exhausted: retry lands
+    assert rec is not None
+    assert current_generation(str(tmp_path)) == rec.generation
+    assert pinned_generations(str(tmp_path)) == {"gen-000001"}
+    assert svc.health().index_swaps == 1
+
+
+def test_rollback_preserves_post_swap_writes(tmp_path):
+    db = small_db(n=700, seed=8)
+    wl = small_workload(db, n_queries=12)
+    svc = init_store(
+        str(tmp_path), _build_index(db, wl),
+        cfg=ServiceConfig(k=wl.k, nprobe=EXACT, max_batch=16, deadline_s=0.0),
+    )
+    tuner = Tuner(svc, str(tmp_path), cfg=TunerConfig(retune_nprobe=False))
+    with pytest.raises(RuntimeError):
+        tuner.rollback()  # nothing swapped yet
+    rec = tuner.tune_once(force=True)
+    assert current_generation(str(tmp_path)) == rec.generation
+    ids = svc.insert(np.random.default_rng(1).normal(size=(4, db.d)).astype(np.float32))
+    before = set(int(i) for i in svc.live_ids())
+    tuner.rollback()
+    # writes acked after the forward swap replay onto the displaced layout
+    assert set(int(i) for i in svc.live_ids()) == before
+    assert set(int(i) for i in ids) <= before
+    assert current_generation(str(tmp_path)) == "gen-000001"
+    assert pinned_generations(str(tmp_path)) == set()
+    assert svc.wal.pin_seq is None and svc._nprobe_by_filter is None
+    _stream(svc, wl)
+    assert svc.health().index_swaps == 2  # rollback is itself a swap
+
+
+# ---------------------------------------------------------------------------
+# triggers, nprobe retune install, workload reconstruction
+# ---------------------------------------------------------------------------
+
+
+def test_should_rebuild_thresholds_and_cooldown():
+    tuner = Tuner.__new__(Tuner)  # should_rebuild only reads cfg + cooldown
+    tuner.cfg = TunerConfig(
+        share_shift=0.3, recall_floor=0.7, delta_growth_per_s=100.0,
+        min_window=64, min_interval_s=1000.0,
+    )
+    tuner._last_swap_t = None
+    assert tuner.should_rebuild(_report(n_window=10, share_shift=0.9)) is None
+    assert tuner.should_rebuild(_report(share_shift=0.31)) == "share-shift"
+    assert tuner.should_rebuild(_report(recall_at_k=0.5)) == "recall-sag"
+    assert tuner.should_rebuild(_report(delta_growth_per_s=150.0)) == "delta-growth"
+    assert tuner.should_rebuild(_report(recall_at_k=0.9)) is None
+    tuner._last_swap_t = time.monotonic()  # inside the cooldown
+    assert tuner.should_rebuild(_report(share_shift=0.9)) is None
+
+
+def test_retune_installs_filter_keyed_nprobe():
+    db = small_db(n=700, seed=10)
+    wl = small_workload(db, n_queries=30)
+    svc = _service(db, wl, nprobe=2)
+    ref = _service(db, wl)  # exhaustive reference
+    _stream(svc, wl)  # two passes: the reconstruction reads the RECENT half
+    _stream(svc, wl)  # of the window, which must carry every template
+    tuner = Tuner(
+        svc,
+        cfg=TunerConfig(
+            retune_nprobe=True, target_recall=1.0, max_nprobe=EXACT,
+            workload_queries=64, sample_per_template=8,
+        ),
+    )
+    rec = tuner.tune_once(force=True)
+    assert rec.nprobe_by_filter is not None
+    # overrides are keyed by the actual filter tuples the traffic carried
+    assert set(rec.nprobe_by_filter) == set(wl.templates)
+    assert svc._nprobe_by_filter == rec.nprobe_by_filter
+    # at target_recall=1.0 with an exhaustive cap, the tuned service answers
+    # exactly — the per-flush translation in _answer is what applies them
+    s_ids, s_scores = _stream(svc, wl)
+    r_ids, r_scores = _stream(ref, wl)
+    assert_same_results(s_scores, s_ids, r_scores, r_ids)
+    svc.set_nprobe_by_filter(None)
+    assert svc._nprobe_by_filter is None
+
+
+def test_reconstruct_workload_shares_vectors_determinism():
+    fa, fb = (("A", 1),), (("B", 2),)
+    traffic = [(0.0, fa)] * 6 + [(0.0, fb)] * 2
+    vec = np.full(4, 7.0, np.float32)
+    samples = [(vec, fa, np.array([1]))]
+    fallback = np.zeros((10, 4), np.float32)
+    wl = reconstruct_workload(traffic, samples, fallback_vectors=fallback, n_queries=8)
+    assert wl is not None and set(wl.templates) == {fa, fb}
+    counts = {wl.templates[t]: int((wl.template_of == t).sum()) for t in range(2)}
+    assert counts[fa] == 6 and counts[fb] == 2  # observed shares preserved
+    # fa queries use the reservoir's REAL query vector; fb falls back
+    np.testing.assert_array_equal(
+        wl.vectors[wl.template_of == wl.templates.index(fa)], np.tile(vec, (6, 1))
+    )
+    wl2 = reconstruct_workload(traffic, samples, fallback_vectors=fallback, n_queries=8)
+    np.testing.assert_array_equal(wl.vectors, wl2.vectors)  # deterministic
+    assert wl.templates == wl2.templates
+    # every observed template keeps >= 1 query however rare
+    rare = [(0.0, fa)] * 99 + [(0.0, fb)]
+    wl3 = reconstruct_workload(rare, (), fallback_vectors=fallback, n_queries=10)
+    assert (wl3.template_of == wl3.templates.index(fb)).sum() == 1
+    assert reconstruct_workload([], (), fallback_vectors=fallback) is None
