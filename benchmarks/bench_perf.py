@@ -1,0 +1,150 @@
+"""Kernel-profiler perf baseline: the rows ``check_perf.py`` gates in CI.
+
+Runs the f32 and PQ engine paths under ``obs.profile.KernelProfiler`` on a
+FIXED workload (sizes deliberately independent of ``REPRO_BENCH_FAST`` /
+the scale env knobs) so the attributed bytes, FLOPs, dispatch counts and
+occupancies are machine-independent constants: any drift in them means the
+planner's bucketing or the profiler's attribution model changed, and the
+exact-match gate in ``check_perf.py`` catches it. Timing rows (``*_us``)
+are machine-dependent and gated with a wide tolerance band instead.
+
+Also writes ``PROFILE_perf.json`` (the profiler's full roofline report, a CI
+artifact) and runs the flight-recorder incident smoke: a live ``HQIService``
+with an armed ``service.flush`` failpoint must produce exactly one
+schema-valid incident bundle under ``incidents/`` (also uploaded by CI).
+
+Full-precision values lead each row's "derived" field; ``emit``'s
+``us_per_call`` column is rounded to 0.1 and only carries the timings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import HQIConfig, HQIIndex
+from repro.core.workload import kg_style
+
+from .common import emit
+
+# fixed workload: never scaled by FAST/N/D/Q — the exact rows below must be
+# bit-identical on every machine and backend for the baseline gate to work
+PERF_N = 6000
+PERF_D = 16
+PERF_Q = 256
+PERF_NPROBE = 8
+PASSES = 3
+
+
+def _emit_exact(name: str, value: float, unit: str) -> None:
+    # full precision in derived (check_perf parses the leading token);
+    # us_per_call's %.1f would destroy occupancy ratios
+    emit(name, 0.0, f"{value:.12g} {unit}")
+
+
+def _profiled_pass(hqi, wl, prof, mode: str):
+    """Warmup + PASSES profiled searches; returns (wall_s/pass, scan totals,
+    all-phase totals)."""
+    hqi.search(wl, nprobe=PERF_NPROBE, batch_vec=True, scan_mode=mode)  # compile
+    prof.reset()
+    t0 = time.perf_counter()
+    for _ in range(PASSES):
+        hqi.search(wl, nprobe=PERF_NPROBE, batch_vec=True, scan_mode=mode)
+    wall = (time.perf_counter() - t0) / PASSES
+    return wall, prof.totals(phase="scan"), prof.totals()
+
+
+def _emit_mode(tag: str, wall_s: float, scan: dict, total: dict) -> None:
+    emit(f"perf/{tag}_us", wall_s * 1e6,
+         f"{wall_s * 1e6:.1f} us/pass, {PERF_Q} queries profiled")
+    _emit_exact(f"perf/{tag}_bytes", scan["bytes"] / PASSES, "scan bytes/pass")
+    _emit_exact(f"perf/{tag}_flops", scan["flops"] / PASSES, "scan FLOPs/pass")
+    _emit_exact(f"perf/{tag}_occupancy", scan["row_occupancy"],
+                "scan row occupancy (1 - padding waste)")
+    _emit_exact(f"perf/{tag}_dispatches", total["dispatches"] / PASSES,
+                "attributed dispatches/pass (all phases)")
+
+
+def _incident_smoke() -> int:
+    """Live service + armed ``service.flush`` failpoint → exactly one
+    schema-valid incident bundle in ``incidents/``. Returns bundle count."""
+    import shutil
+
+    from repro.fault import failpoints
+    from repro.obs import trace
+    from repro.obs.flight import FlightRecorder, validate_incident_bundle
+    from repro.service import HQIService, ServiceConfig
+
+    kg = kg_style(n=1500, d=PERF_D, queries_per_split=32, seed=1)
+    wl = kg.splits[0]
+    hqi = HQIIndex.build(
+        kg.db, wl, HQIConfig(min_partition_size=128, max_leaves=8)
+    )
+    svc = HQIService(
+        hqi, ServiceConfig(k=wl.k, nprobe=PERF_NPROBE, max_batch=16)
+    )
+    root = os.path.abspath("incidents")
+    shutil.rmtree(root, ignore_errors=True)
+    trace.enable(capacity=8192)
+    rec = FlightRecorder(svc, root, max_incidents=4)
+    try:
+        assert rec.observe() is None  # baseline sample
+        for i in range(8):
+            svc.submit(wl.vectors[i], wl.templates[wl.template_of[i]])
+        failpoints.arm("service.flush", count=1)
+        svc.flush()  # crash is contained; telemetry records the failure
+        path = rec.observe()
+        assert path is not None, "armed flush crash produced no incident"
+        validate_incident_bundle(path)
+        assert rec.observe() is None, "single crash dumped twice"
+        return len(rec.incidents())
+    finally:
+        svc.stop(drain=False)
+        trace.disable()
+        failpoints.disarm_all()
+
+
+def main() -> None:
+    from repro.obs.profile import disable_profiler, enable_profiler
+
+    kg = kg_style(n=PERF_N, d=PERF_D, queries_per_split=PERF_Q, seed=0)
+    wl = kg.splits[0]
+    hqi = HQIIndex.build(
+        kg.db, wl,
+        HQIConfig(min_partition_size=256, max_leaves=32,
+                  scan_mode="pq", pq_m=8),
+    )
+
+    prof = enable_profiler()
+    try:
+        wall, scan, total = _profiled_pass(hqi, wl, prof, "f32")
+        _emit_mode("f32_scan", wall, scan, total)
+        report_f32 = prof.report()
+
+        wall, scan, total = _profiled_pass(hqi, wl, prof, "pq")
+        _emit_mode("pq_scan", wall, scan, total)
+        rerank = prof.totals(phase="rerank")
+        _emit_exact("perf/pq_rerank_flops", rerank.get("flops", 0.0) / PASSES,
+                    "re-rank FLOPs/pass")
+
+        report = prof.report()
+        report["phases"].update(report_f32["phases"])  # both modes in the dump
+        with open("PROFILE_perf.json", "w") as f:
+            json.dump(report, f, indent=2)
+        cov = report["coverage"]
+        _emit_exact("perf/coverage", cov,
+                    "profiler dispatch coverage (attributed/issued)")
+        assert cov == 1.0, f"unattributed kernel dispatches (coverage {cov})"
+    finally:
+        disable_profiler()
+
+    n_bundles = _incident_smoke()
+    _emit_exact("perf/flight_incident", float(n_bundles),
+                "incident bundles from one armed flush crash (must be 1)")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -140,10 +140,13 @@ def main() -> None:
 def main_obs() -> None:
     """Observability overhead + drift detection on a WAL-backed service.
 
-    Interleaves tracing-enabled and -disabled passes (A/B/A/B) over the same
-    service so machine noise hits both arms equally, then reports the
+    Interleaves observability-enabled and -disabled passes (A/B/A/B) over the
+    same service so machine noise hits both arms equally, then reports the
     enabled/disabled median ratio — the number ci.yml gates at 1.05 via
-    ``benchmarks/check_obs.py``. The enabled pass also exports ``trace.json``
+    ``benchmarks/check_obs.py``. The enabled arm runs tracing AND the kernel
+    dispatch profiler together (the gate covers the full observability
+    stack, and the trace must carry the ``profile.dispatch`` instants
+    check_obs requires). The enabled pass also exports ``trace.json``
     (Chrome trace, schema-validated here) and feeds the drift monitor a
     template shift at the stream midpoint that ``obs/drift_shift`` must see.
     """
@@ -153,6 +156,7 @@ def main_obs() -> None:
 
     from repro.obs import trace
     from repro.obs.metrics import get_registry
+    from repro.obs.profile import disable_profiler, enable_profiler
     from repro.store.wal import WriteAheadLog
 
     n = min(N, 10_000 if FAST else 50_000)
@@ -208,8 +212,10 @@ def main_obs() -> None:
     t_dis, t_en = [], []
     for _ in range(2 if FAST else 3):
         trace.disable()
+        disable_profiler()
         t_dis.append(one_pass())
         trace.enable()  # fresh Tracer per enabled pass (bounded ring)
+        prof = enable_profiler()
         t_en.append(one_pass())
     m_queries = len(rows_a) + len(rows_b)
     dis_s = float(np.median(t_dis))
@@ -224,14 +230,23 @@ def main_obs() -> None:
     span_names = {e["name"] for e in doc["traceEvents"]}
     rep = svc.drift_report()
     reg_keys = sorted(get_registry().snapshot().keys())
+    prof_snap = prof.snapshot()
     trace.disable()
+    disable_profiler()
 
     emit("obs/qps_disabled", dis_s / m_queries * 1e6,
          f"{m_queries / dis_s:.0f} qps, tracing off")
     emit("obs/qps_enabled", en_s / m_queries * 1e6,
-         f"{m_queries / en_s:.0f} qps, tracing on ({tracer.span_count} spans)")
+         f"{m_queries / en_s:.0f} qps, tracing+profiler on "
+         f"({tracer.span_count} spans)")
     emit("obs/overhead_ratio", ratio,
          f"{ratio:.3f}x enabled/disabled (gate: 1.05)")
+    phases = {
+        k: v["dispatches"] for k, v in prof_snap.items() if isinstance(v, dict)
+    }
+    emit("obs/profile", 0.0,
+         f"{prof_snap.get('attributed', 0)} dispatches attributed in enabled "
+         f"arm: {phases}")
     emit("obs/trace_events", float(n_events),
          f"{n_events} events, {len(span_names)} distinct names -> {trace_path}")
     emit("obs/drift_shift", rep.share_shift,

@@ -28,9 +28,11 @@ from repro.obs.trace import validate_chrome_trace
 
 # every serving trace must show these stages end-to-end; dispatch/merge span
 # names carry stage suffixes (dispatch.scan, merge.segmented, merge.final,
-# merge.gather) so those two are prefix-matched
+# merge.gather) so those two are prefix-matched. profile.* instants come
+# from the kernel profiler, which main_obs runs alongside tracing in the
+# enabled arm — their absence means the profiler lost its dispatch hook.
 REQUIRED_SPANS = ["queue.wait", "flush", "wal.fsync"]
-REQUIRED_PREFIXES = ["dispatch.", "merge."]
+REQUIRED_PREFIXES = ["dispatch.", "merge.", "profile."]
 
 
 def check(bench_path: str, trace_path: str, max_ratio: float) -> list:

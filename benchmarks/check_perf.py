@@ -1,0 +1,186 @@
+"""CI perf-baseline gate for the kernel profiler's numbers.
+
+    PYTHONPATH=src python -m benchmarks.check_perf [BENCH_perf.json]
+    PYTHONPATH=src python -m benchmarks.check_perf --write-baseline
+    PYTHONPATH=src python -m benchmarks.check_perf --degraded-selftest
+
+Compares the ``perf`` suite's rows (``benchmarks/bench_perf.py``) against the
+committed per-backend baseline ``benchmarks/baselines/BENCH_perf_baseline.json``
+— the repo's durable perf record. Two row kinds:
+
+  * **exact** — attributed bytes / FLOPs / dispatch counts / occupancies on
+    the fixed perf workload. Machine-independent by construction; gated at
+    rtol 1e-6. A mismatch means the planner's bucketing or the profiler's
+    attribution model changed — if intentional, re-record with
+    ``--write-baseline`` and commit the diff (the diff IS the review
+    artifact).
+  * **timing** — ``*_us`` wall-clock rows. Gated as a ratio against the
+    recorded baseline with a wide band (``REPRO_PERF_TOLERANCE``, default
+    3.0x: shared CI runners are noisy; the gate is for order-of-magnitude
+    regressions, not percent drift). Bump the env in the workflow rather
+    than deleting the gate.
+
+Baselines are keyed per backend (``jnp`` vs ``pallas-interpret``, from the
+bench env's ``use_pallas``); an unrecorded backend skips with a warning so a
+new backend can land before its baseline does. ``--degraded-selftest``
+proves the gate is live: it gates the current rows against a synthetically
+degraded baseline and exits 0 only if that comparison FAILS.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+BASELINE_SCHEMA = "hqi-perf-baseline-v1"
+BASELINE_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baselines", "BENCH_perf_baseline.json"
+)
+EXACT_RTOL = 1e-6
+DEFAULT_TOLERANCE = 3.0
+
+
+def _row_value(row: dict) -> float:
+    """Full-precision value: leading token of "derived" (bench_perf writes
+    ``{value:.12g} unit...``), falling back to the rounded us_per_call."""
+    try:
+        return float(row["derived"].split(None, 1)[0])
+    except (ValueError, IndexError, KeyError):
+        return float(row["us_per_call"])
+
+
+def _row_kind(name: str) -> str:
+    return "timing" if name.endswith("_us") else "exact"
+
+
+def load_rows(bench_path: str) -> Dict[str, Dict[str, object]]:
+    with open(bench_path) as f:
+        bench = json.load(f)
+    backend = "pallas-interpret" if bench["env"].get("use_pallas") == "1" else "jnp"
+    rows = {
+        r["name"]: {"value": _row_value(r), "kind": _row_kind(r["name"])}
+        for r in bench["rows"]
+    }
+    return {"backend": backend, "rows": rows}
+
+
+def gate(current: dict, baseline: dict, tolerance: float) -> List[str]:
+    """Compare one backend's current rows against its baseline rows."""
+    errors: List[str] = []
+    for name, base in sorted(baseline.items()):
+        cur = current.get(name)
+        if cur is None:
+            errors.append(f"row {name} in baseline but missing from bench output")
+            continue
+        bv, cv = float(base["value"]), float(cur["value"])
+        if base.get("kind", _row_kind(name)) == "exact":
+            denom = max(abs(bv), 1e-30)
+            if abs(cv - bv) / denom > EXACT_RTOL:
+                errors.append(
+                    f"{name}: exact value drifted {bv:.12g} -> {cv:.12g} "
+                    f"(attribution/bucketing change? re-record with "
+                    f"--write-baseline if intentional)"
+                )
+        else:
+            if bv > 0 and cv > bv * tolerance:
+                errors.append(
+                    f"{name}: {cv:.1f}us exceeds baseline {bv:.1f}us "
+                    f"x{tolerance:.1f} tolerance ({cv / bv:.2f}x)"
+                )
+    for name in sorted(set(current) - set(baseline)):
+        print(f"note: new row {name} not in baseline (re-record to start gating it)")
+    return errors
+
+
+def write_baseline(bench_path: str) -> str:
+    cur = load_rows(bench_path)
+    doc = {"schema": BASELINE_SCHEMA, "recorded": "", "bench": {}, "backends": {}}
+    if os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH) as f:
+            doc = json.load(f)
+    with open(bench_path) as f:
+        env = json.load(f)["env"]
+    doc["schema"] = BASELINE_SCHEMA
+    doc["recorded"] = time.strftime("%Y-%m-%d")
+    doc["bench"] = {"python": env.get("python", "")}
+    doc["backends"][cur["backend"]] = {"rows": cur["rows"]}
+    os.makedirs(os.path.dirname(BASELINE_PATH), exist_ok=True)
+    with open(BASELINE_PATH, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"recorded {len(cur['rows'])} rows for backend {cur['backend']!r} "
+          f"-> {BASELINE_PATH}")
+    return BASELINE_PATH
+
+
+def degraded_selftest(bench_path: str, tolerance: float) -> int:
+    """Exit 0 iff the gate FAILS against a synthetically degraded baseline —
+    proves in CI that the comparison is live, not vacuously green."""
+    cur = load_rows(bench_path)
+    degraded: Dict[str, Dict[str, object]] = {}
+    for name, row in cur["rows"].items():
+        v = float(row["value"])
+        if row["kind"] == "timing":
+            # pretend the recorded machine was far faster: current wall time
+            # must now exceed baseline * tolerance
+            degraded[name] = {"value": v / (tolerance * 10.0), "kind": "timing"}
+        else:
+            degraded[name] = {"value": v, "kind": "exact"}
+    # and one attribution drift: perturb a single exact row past rtol
+    for name, row in degraded.items():
+        if row["kind"] == "exact" and float(row["value"]) != 0.0:
+            row["value"] = float(row["value"]) * (1.0 + 1e-3)
+            break
+    errors = gate(cur["rows"], degraded, tolerance)
+    if not errors:
+        print("FAIL: degraded baseline passed the gate — gate is dead",
+              file=sys.stderr)
+        return 1
+    print(f"selftest OK: degraded baseline correctly rejected "
+          f"({len(errors)} violations, e.g. {errors[0]!r})")
+    return 0
+
+
+def main() -> int:
+    argv = [a for a in sys.argv[1:]]
+    tolerance = float(os.environ.get("REPRO_PERF_TOLERANCE", str(DEFAULT_TOLERANCE)))
+    paths = [a for a in argv if not a.startswith("--")]
+    bench_path = paths[0] if paths else "BENCH_perf.json"
+
+    if "--write-baseline" in argv:
+        write_baseline(bench_path)
+        return 0
+    if "--degraded-selftest" in argv:
+        return degraded_selftest(bench_path, tolerance)
+
+    cur = load_rows(bench_path)
+    if not os.path.exists(BASELINE_PATH):
+        print(f"FAIL: no baseline at {BASELINE_PATH} "
+              f"(run --write-baseline and commit it)", file=sys.stderr)
+        return 1
+    with open(BASELINE_PATH) as f:
+        doc = json.load(f)
+    if doc.get("schema") != BASELINE_SCHEMA:
+        print(f"FAIL: baseline schema {doc.get('schema')!r} != {BASELINE_SCHEMA!r}",
+              file=sys.stderr)
+        return 1
+    backend = doc["backends"].get(cur["backend"])
+    if backend is None:
+        print(f"warning: no baseline recorded for backend {cur['backend']!r} "
+              f"({sorted(doc['backends'])} recorded) — skipping gate")
+        return 0
+    errors = gate(cur["rows"], backend["rows"], tolerance)
+    for e in errors:
+        print(f"FAIL: {e}", file=sys.stderr)
+    if not errors:
+        n_exact = sum(1 for r in backend["rows"].values() if r.get("kind") == "exact")
+        print(f"perf baseline OK: {len(backend['rows'])} rows "
+              f"({n_exact} exact, tolerance {tolerance:.1f}x, "
+              f"backend {cur['backend']})")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

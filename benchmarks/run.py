@@ -14,7 +14,8 @@ import os
 import sys
 
 SMOKE_SUITES = [
-    "engine", "kernels", "service", "distributed", "store", "obs", "fault", "tuner",
+    "engine", "kernels", "service", "distributed", "store", "obs", "fault",
+    "tuner", "perf",
 ]
 
 
@@ -27,8 +28,8 @@ def main() -> None:
 
     from . import (
         bench_distributed, bench_engine, bench_fault, bench_fig4_5, bench_fig6,
-        bench_fig7, bench_kernels, bench_service, bench_store, bench_table3_4,
-        bench_table5, bench_tuner, common,
+        bench_fig7, bench_kernels, bench_perf, bench_service, bench_store,
+        bench_table3_4, bench_table5, bench_tuner, common,
     )
 
     suites = {
@@ -45,6 +46,7 @@ def main() -> None:
         "obs": bench_service.main_obs,
         "fault": bench_fault.main,
         "tuner": bench_tuner.main,
+        "perf": bench_perf.main,
     }
     picks = args or list(suites)
     print("name,us_per_call,derived")

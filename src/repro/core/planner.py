@@ -74,6 +74,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from ..obs.profile import get_profiler
 from ..obs.trace import fence, get_tracer
 from .arena import PackedArena, ShardedArena
 from .ivf import IVFIndex, ScanStats
@@ -228,6 +229,7 @@ def _iter_f32_buckets(plan, arena, q_vecs, cfg, stats):
     segmented layouts disagree on, so the scan math lives here once."""
     m, k, tq = plan.m, plan.k, plan.tq
     d = q_vecs.shape[1]
+    prof = get_profiler()
     for lp in sorted(plan.buckets):
         units = plan.buckets[lp]
         Vrows, valid, qrow_of, slot_of = _assemble_bucket(units, lp, plan, arena)
@@ -241,6 +243,7 @@ def _iter_f32_buckets(plan, arena, q_vecs, cfg, stats):
             # comparable across configurations — the sharded executor counts
             # the same way per rank
             stats.bytes_scanned += len(units) * lp * d * 4
+        t0 = prof.t0() if prof.enabled else 0
         with get_tracer().span("dispatch.scan", mode="f32", lp=lp, units=len(units)):
             s, i_loc = kops.workunit_topk(
                 jnp.asarray(Q),
@@ -252,6 +255,20 @@ def _iter_f32_buckets(plan, arena, q_vecs, cfg, stats):
                 interpret=cfg.interpret,
             )
             s, i_loc = fence(s, i_loc)  # device time is real iff tracing is on
+        if prof.enabled:
+            # real distance work: 2·d MACs per (query, live row) pair within
+            # each unit; padded work covers the full [W, tq, lp] bucket
+            nq_u = wmask.sum(axis=1)
+            rows_u = valid.sum(axis=1)
+            prof.record_dispatch(
+                "scan", "f32", lp, t0,
+                nbytes=Q.nbytes + V.nbytes + valid.nbytes
+                + W * tq * min(k, lp) * 12,
+                flops=2.0 * d * float((nq_u * rows_u).sum()),
+                flops_padded=2.0 * d * W * tq * lp,
+                units=len(units), units_padded=W,
+                rows=int(rows_u.sum()), rows_padded=W * lp,
+            )
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)  # index within the unit's lp rows (-1 = none)
         kk = s.shape[-1]
@@ -318,11 +335,21 @@ def _execute_plan_f32_segmented(
         flat_s[rows, :kk] = es[:, :kk]
         flat_i[rows, :kk] = ei[:, :kk]
 
+    prof = get_profiler()
+    t0 = prof.t0() if prof.enabled else 0
     with get_tracer().span("merge.segmented", m=m, candidates=C_total):
         top_s, top_i = kops.segmented_merge_topk(
             jnp.asarray(flat_s), jnp.asarray(flat_i), jnp.asarray(seg_of), m, k
         )
         top_s, top_i = fence(top_s, top_i)
+    if prof.enabled:
+        prof.record_dispatch(
+            "merge", "segmented", C_pad, t0,
+            nbytes=flat_s.nbytes + flat_i.nbytes + seg_of.nbytes + m * k * 12,
+            flops=0.0, flops_padded=0.0,
+            units=m, units_padded=m,
+            rows=C_total, rows_padded=C_pad,
+        )
     return np.asarray(top_s, dtype=np.float32), np.asarray(top_i, dtype=np.int64)
 
 
@@ -363,14 +390,27 @@ def _padded_merge(
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """merge_topk with the candidate width padded to a power of two (so
     repeated workloads reuse a bounded set of compiled merge shapes)."""
-    width = _next_pow2(flat_s.shape[1], k)
-    if width > flat_s.shape[1]:
-        padc = width - flat_s.shape[1]
+    real_width = flat_s.shape[1]
+    width = _next_pow2(real_width, k)
+    if width > real_width:
+        padc = width - real_width
         flat_s = np.pad(flat_s, ((0, 0), (0, padc)), constant_values=-np.inf)
         flat_i = np.pad(flat_i, ((0, 0), (0, padc)), constant_values=-1)
-    with get_tracer().span("merge.final", m=flat_s.shape[0], width=width):
+    mq = flat_s.shape[0]
+    prof = get_profiler()
+    t0 = prof.t0() if prof.enabled else 0
+    with get_tracer().span("merge.final", m=mq, width=width):
         s, i = kops.merge_topk(jnp.asarray(flat_s), jnp.asarray(flat_i), k)
-        return fence(s, i)
+        s, i = fence(s, i)
+    if prof.enabled:
+        prof.record_dispatch(
+            "merge", "final", width, t0,
+            nbytes=flat_s.nbytes + flat_i.nbytes + mq * k * 12,
+            flops=0.0, flops_padded=0.0,
+            units=mq, units_padded=mq,
+            rows=mq * real_width, rows_padded=mq * width,
+        )
+    return s, i
 
 
 def _execute_plan_pq(
@@ -443,6 +483,7 @@ def _pq_stage_a_dense(
     cand_s = np.full((m, plan.n_slots, kprime), -np.inf, dtype=np.float32)
     cand_rows = np.full((m, plan.n_slots, kprime), -1, dtype=np.int64)
     _account_candidates(stats, cand_s.nbytes + cand_rows.nbytes)
+    prof = get_profiler()
 
     for lp in sorted(plan.buckets):
         units = plan.buckets[lp]
@@ -458,6 +499,7 @@ def _pq_stage_a_dense(
         if stats is not None:
             stats.bytes_scanned += len(units) * lp * arena.codes.shape[1]
         kk = min(kprime, lp)
+        t0 = prof.t0() if prof.enabled else 0
         with get_tracer().span("dispatch.scan", mode="pq", lp=lp, units=len(units)):
             s, i_loc = kops.workunit_pq_topk(
                 jnp.asarray(luts),
@@ -468,6 +510,20 @@ def _pq_stage_a_dense(
                 interpret=cfg.interpret,
             )
             s, i_loc = fence(s, i_loc)
+        if prof.enabled:
+            # one-hot MXU contraction: 2·M·256 MACs per (query, live row)
+            M = codes.shape[2]
+            nq_u = wmask.sum(axis=1)
+            rows_u = valid.sum(axis=1)
+            prof.record_dispatch(
+                "scan", "pq", lp, t0,
+                nbytes=int(luts.nbytes) + codes.nbytes + valid.nbytes
+                + W * plan.tq * kk * 12,
+                flops=2.0 * M * 256 * float((nq_u * rows_u).sum()),
+                flops_padded=2.0 * M * 256 * W * plan.tq * lp,
+                units=len(units), units_padded=W,
+                rows=int(rows_u.sum()), rows_padded=W * lp,
+            )
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)  # [W, tq, kk] index into the unit's lp rows
         packed_rows = np.take_along_axis(
@@ -516,6 +572,7 @@ def _pq_stage_a_segmented(
     seg_of = np.full(C_pad, m, dtype=np.int32)
     seg_of[:C_total] = np.repeat(np.arange(m, dtype=np.int32), counts)
     _account_candidates(stats, flat_s.nbytes + flat_rows.nbytes)
+    prof = get_profiler()
 
     for lp in sorted(plan.buckets):
         units = plan.buckets[lp]
@@ -526,6 +583,7 @@ def _pq_stage_a_segmented(
         if stats is not None:
             stats.bytes_scanned += len(units) * lp * arena.codes.shape[1]
         kk = min(kprime, lp)
+        t0 = prof.t0() if prof.enabled else 0
         with get_tracer().span("dispatch.scan", mode="pq-res", lp=lp, units=len(units)):
             s, i_loc = kops.workunit_pq_topk_resident(
                 luts_dev,
@@ -537,6 +595,22 @@ def _pq_stage_a_segmented(
                 interpret=cfg.interpret,
             )
             s, i_loc = fence(s, i_loc)
+        if prof.enabled:
+            # the resident path streams one [M, 256] LUT row per LIVE query
+            # slot instead of expanding [W, tq, M, 256]
+            M = codes.shape[2]
+            W = Vrows.shape[0]
+            nq_u = wmask.sum(axis=1)
+            rows_u = valid.sum(axis=1)
+            prof.record_dispatch(
+                "scan", "pq-res", lp, t0,
+                nbytes=codes.nbytes + valid.nbytes
+                + int(nq_u.sum()) * M * 256 * 4 + W * plan.tq * kk * 12,
+                flops=2.0 * M * 256 * float((nq_u * rows_u).sum()),
+                flops_padded=2.0 * M * 256 * W * plan.tq * lp,
+                units=len(units), units_padded=W,
+                rows=int(rows_u.sum()), rows_padded=W * lp,
+            )
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)
         packed_rows = np.take_along_axis(
@@ -550,11 +624,21 @@ def _pq_stage_a_segmented(
         flat_s[rows_f, :kk] = s[wmask]
         flat_rows[rows_f, :kk] = packed_rows[wmask]
 
+    t0 = prof.t0() if prof.enabled else 0
     with get_tracer().span("merge.segmented", m=m, candidates=C_total):
         _, top_rows = kops.segmented_merge_topk(
             jnp.asarray(flat_s), jnp.asarray(flat_rows), jnp.asarray(seg_of), m, kprime
         )
         top_rows = fence(top_rows)
+    if prof.enabled:
+        prof.record_dispatch(
+            "merge", "segmented", C_pad, t0,
+            nbytes=flat_s.nbytes + flat_rows.nbytes + seg_of.nbytes
+            + m * kprime * 12,
+            flops=0.0, flops_padded=0.0,
+            units=m, units_padded=m,
+            rows=C_total, rows_padded=C_pad,
+        )
     return np.asarray(top_rows, dtype=np.int64)
 
 
@@ -585,6 +669,8 @@ def _pq_rerank_and_fold(
     if stats is not None:
         # real surviving candidates only (matches the sharded re-rank)
         stats.bytes_scanned += int((rows >= 0).sum()) * d * 4
+    prof = get_profiler()
+    t0 = prof.t0() if prof.enabled else 0
     with get_tracer().span("rerank.exact", m=m, kprime=kprime):
         s, i_loc = kops.workunit_topk(
             jnp.asarray(Qr),
@@ -596,6 +682,17 @@ def _pq_rerank_and_fold(
             interpret=cfg.interpret,
         )
         s, i_loc = fence(s, i_loc)
+    if prof.enabled:
+        n_real = int((rows >= 0).sum())
+        prof.record_dispatch(
+            "rerank", "f32", kprime, t0,
+            nbytes=Qr.nbytes + Vr.nbytes + valid_r.nbytes
+            + mp * min(k, kprime) * 12,
+            flops=2.0 * d * n_real,
+            flops_padded=2.0 * d * mp * kprime,
+            units=m, units_padded=mp,
+            rows=n_real, rows_padded=mp * kprime,
+        )
     s = np.asarray(s)[:m, 0]  # [m, kk] exact scores
     i_loc = np.asarray(i_loc)[:m, 0]  # [m, kk] index into the k' candidates
     kk = s.shape[-1]
@@ -787,16 +884,27 @@ def _gather_merge(
     R, m = cand_s.shape[:2]
     flat_s = cand_s.reshape(R, m, -1)
     flat_i = cand_i.reshape(R, m, -1)
-    width = _next_pow2(flat_s.shape[2], k)
-    if width > flat_s.shape[2]:
-        padc = width - flat_s.shape[2]
+    real_width = flat_s.shape[2]
+    width = _next_pow2(real_width, k)
+    if width > real_width:
+        padc = width - real_width
         flat_s = np.pad(flat_s, ((0, 0), (0, 0), (0, padc)), constant_values=-np.inf)
         flat_i = np.pad(flat_i, ((0, 0), (0, 0), (0, padc)), constant_values=-1)
+    prof = get_profiler()
+    t0 = prof.t0() if prof.enabled else 0
     with get_tracer().span("merge.gather", ranks=R, m=m, width=width):
         ms, mi = kops.sharded_merge_topk(
             mesh, axis, jnp.asarray(flat_s), jnp.asarray(flat_i), k
         )
         ms, mi = fence(ms, mi)
+    if prof.enabled:
+        prof.record_dispatch(
+            "gather", "sharded", width, t0,
+            nbytes=flat_s.nbytes + flat_i.nbytes + m * k * 12,
+            flops=0.0, flops_padded=0.0,
+            units=R * m, units_padded=R * m,
+            rows=R * m * real_width, rows_padded=R * m * width,
+        )
     return np.asarray(ms, dtype=np.float32), np.asarray(mi, dtype=np.int64)
 
 
@@ -882,9 +990,11 @@ def _execute_sharded_f32(
         if stats is not None:
             stats.bytes_scanned += int(sum(len(u) for u in unit_lists)) * lp * d * 4
         kk = min(k, lp)
+        rank_units = [len(u) for u in unit_lists]
+        prof = get_profiler()
+        t0 = prof.t0() if prof.enabled else 0
         with get_tracer().span(
-            "dispatch.sharded", mode="f32", lp=lp,
-            rank_units=[len(u) for u in unit_lists],
+            "dispatch.sharded", mode="f32", lp=lp, rank_units=rank_units,
         ):
             s, i_loc = kops.sharded_workunit_topk(
                 mesh, axis,
@@ -893,6 +1003,22 @@ def _execute_sharded_f32(
                 use_pallas=cfg.use_pallas, interpret=cfg.interpret,
             )
             s, i_loc = fence(s, i_loc)
+        if prof.enabled:
+            W_ = valid.shape[1]
+            tq_ = splan.plan.tq
+            nq_rw = wmask.sum(axis=2)  # [R, W]
+            rows_rw = valid.sum(axis=2)  # [R, W]
+            prof.record_dispatch(
+                "scan", "sharded-f32", lp, t0,
+                nbytes=Q.nbytes + V.nbytes + valid.nbytes
+                + R * W_ * tq_ * kk * 12,
+                flops=2.0 * d * float((nq_rw * rows_rw).sum()),
+                flops_padded=2.0 * d * R * W_ * tq_ * lp,
+                units=int(sum(rank_units)), units_padded=R * W_,
+                rows=int(rows_rw.sum()), rows_padded=R * W_ * lp,
+                rank_units=rank_units,
+                rank_bytes=[n * lp * d * 4 for n in rank_units],
+            )
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)  # [R, W, tq, kk] index into the unit's lp rows
         for r in range(R):
@@ -918,11 +1044,22 @@ def _execute_sharded_f32(
         # one ragged merge over R·m segments = every rank's local top-k; the
         # gather merge's rank-local reduction over these already-sorted rows
         # is an identity, so the all-gather sees the dense path's operands
+        prof = get_profiler()
+        t0 = prof.t0() if prof.enabled else 0
         with get_tracer().span("merge.segmented", m=R * m, candidates=int(base[-1])):
             seg_s, seg_i = kops.segmented_merge_topk(
                 jnp.asarray(flat_s), jnp.asarray(flat_i), jnp.asarray(seg_of), R * m, k
             )
             seg_s, seg_i = fence(seg_s, seg_i)
+        if prof.enabled:
+            prof.record_dispatch(
+                "merge", "segmented", C_pad, t0,
+                nbytes=flat_s.nbytes + flat_i.nbytes + seg_of.nbytes
+                + R * m * k * 12,
+                flops=0.0, flops_padded=0.0,
+                units=R * m, units_padded=R * m,
+                rows=int(base[-1]), rows_padded=C_pad,
+            )
         ms, mi = _gather_merge(
             mesh, axis,
             np.asarray(seg_s, dtype=np.float32).reshape(R, m, 1, k),
@@ -1016,6 +1153,8 @@ def _execute_sharded_pq(
             _account_lut(
                 stats, R * W * tq * M * 256 * 4, expanded=True
             )
+        prof = get_profiler()
+        t0 = prof.t0() if prof.enabled else 0
         with get_tracer().span(
             "dispatch.sharded", mode="pq", lp=lp, rank_units=rank_units
         ):
@@ -1026,6 +1165,24 @@ def _execute_sharded_pq(
                 stream=segmented,
             )
             s, i_loc = fence(s, i_loc)
+        if prof.enabled:
+            W_ = valid.shape[1]
+            tq_ = splan.plan.tq
+            nq_rw = wmask.sum(axis=2)
+            rows_rw = valid.sum(axis=2)
+            lut_b = (int(nq_rw.sum()) * M * 256 * 4 if segmented
+                     else R * W_ * tq_ * M * 256 * 4)
+            prof.record_dispatch(
+                "scan", "sharded-pq", lp, t0,
+                nbytes=codes.nbytes + valid.nbytes + lut_b
+                + R * W_ * tq_ * kk * 12,
+                flops=2.0 * M * 256 * float((nq_rw * rows_rw).sum()),
+                flops_padded=2.0 * M * 256 * R * W_ * tq_ * lp,
+                units=int(sum(rank_units)), units_padded=R * W_,
+                rows=int(rows_rw.sum()), rows_padded=R * W_ * lp,
+                rank_units=rank_units,
+                rank_bytes=[n * lp * M for n in rank_units],
+            )
         s = np.asarray(s)
         i_loc = np.asarray(i_loc)
         for r in range(R):
@@ -1049,12 +1206,23 @@ def _execute_sharded_pq(
     # global top-k' ADC candidates: k'·|model| gather, identical selection to
     # the single-device merge (a global survivor survives locally too)
     if segmented:
+        prof = get_profiler()
+        t0 = prof.t0() if prof.enabled else 0
         with get_tracer().span("merge.segmented", m=R * m, candidates=int(base[-1])):
             seg_s, seg_i = kops.segmented_merge_topk(
                 jnp.asarray(flat_s), jnp.asarray(flat_rows), jnp.asarray(seg_of),
                 R * m, kprime,
             )
             seg_s, seg_i = fence(seg_s, seg_i)
+        if prof.enabled:
+            prof.record_dispatch(
+                "merge", "segmented", C_pad, t0,
+                nbytes=flat_s.nbytes + flat_rows.nbytes + seg_of.nbytes
+                + R * m * kprime * 12,
+                flops=0.0, flops_padded=0.0,
+                units=R * m, units_padded=R * m,
+                rows=int(base[-1]), rows_padded=C_pad,
+            )
         _, top_rows = _gather_merge(
             mesh, axis,
             np.asarray(seg_s, dtype=np.float32).reshape(R, m, 1, kprime),
@@ -1085,6 +1253,8 @@ def _execute_sharded_pq(
         if stats is not None:
             stats.bytes_scanned += sel.nbytes
     kk = min(k, kprime)
+    prof = get_profiler()
+    t0 = prof.t0() if prof.enabled else 0
     with get_tracer().span("rerank.exact", mode="sharded", m=m, kprime=kprime):
         s, i_loc = kops.sharded_workunit_topk(
             mesh, axis,
@@ -1093,6 +1263,16 @@ def _execute_sharded_pq(
             use_pallas=cfg.use_pallas, interpret=cfg.interpret,
         )
         s, i_loc = fence(s, i_loc)
+    if prof.enabled:
+        n_real = int(valid_r.sum())
+        prof.record_dispatch(
+            "rerank", "sharded", kprime, t0,
+            nbytes=Qr.nbytes + Vr.nbytes + valid_r.nbytes + R * mp * kk * 12,
+            flops=2.0 * d * n_real,
+            flops_padded=2.0 * d * R * mp * kprime,
+            units=m, units_padded=R * mp,
+            rows=n_real, rows_padded=R * mp * kprime,
+        )
     s = np.asarray(s)[:, :m, 0]  # [R, m, kk] exact partial scores
     i_loc = np.asarray(i_loc)[:, :m, 0]  # [R, m, kk] index into the k' candidates
     rows_b = np.broadcast_to(rows[None], (R, m, kprime))

@@ -36,6 +36,9 @@ def main():
     ap.add_argument("--max-batch", type=int, default=32)
     ap.add_argument("--nprobe", type=int, default=8)
     ap.add_argument("--trace-out", default="trace.json")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the kernel dispatch profiler alongside the "
+                         "stream and print its roofline-attributed table")
     ap.add_argument("--probe-recall", action="store_true",
                     help="replay the answered-query reservoir against a "
                          "brute-force scan (exact recall@k; O(n) per sample)")
@@ -60,6 +63,11 @@ def main():
     )
 
     tracer = trace.enable()
+    prof = None
+    if args.profile:
+        from ..obs.profile import disable_profiler, enable_profiler
+
+        prof = enable_profiler()
 
     # first half draws low-numbered templates, second half high-numbered:
     # the share shift the drift report should flag
@@ -88,6 +96,11 @@ def main():
 
     print("== metrics ==")
     print(get_registry().to_json(indent=2))
+
+    if prof is not None:
+        print("== profile ==")
+        print(prof.format_table())
+        disable_profiler()
 
     rep = svc.drift_report(probe_recall=args.probe_recall)
     print("== drift ==")

@@ -16,6 +16,7 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link IC
 from __future__ import annotations
 
 import dataclasses
+import os
 import re
 from typing import Dict, Optional, Tuple
 
@@ -24,6 +25,53 @@ import numpy as np
 PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip
 LINK_BW = 50e9  # bytes/s per ICI link
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareTerms:
+    """Peak terms the dispatch profiler normalizes achieved throughput by."""
+
+    name: str
+    peak_flops: float  # FLOP/s
+    hbm_bw: float  # bytes/s
+    link_bw: float  # bytes/s per link
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+# The cpu profile is deliberately conservative (a few-core container running
+# interpret mode): the roofline *fractions* the profiler reports are only
+# meaningful relative to a fixed denominator, so any stable figure works for
+# regression tracking — what matters is that the same baseline always divides
+# by the same terms.
+_HW_PROFILES: Dict[str, HardwareTerms] = {
+    "tpu-v5e": HardwareTerms("tpu-v5e", PEAK_FLOPS, HBM_BW, LINK_BW),
+    "cpu": HardwareTerms("cpu", 5e11, 5e10, 1e10),
+}
+
+
+def current_hardware() -> HardwareTerms:
+    """Hardware terms for the machine running now.
+
+    ``REPRO_HW`` names a profile explicitly; otherwise a TPU jax backend maps
+    to tpu-v5e and anything else (CPU / interpret mode) to the cpu profile.
+    """
+    name = os.environ.get("REPRO_HW")
+    if name:
+        try:
+            return _HW_PROFILES[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown REPRO_HW={name!r}; one of {sorted(_HW_PROFILES)}"
+            ) from None
+    try:
+        import jax
+
+        backend = jax.default_backend()
+    except Exception:  # pragma: no cover - jax is a hard dep everywhere else
+        backend = "cpu"
+    return _HW_PROFILES["tpu-v5e" if backend == "tpu" else "cpu"]
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

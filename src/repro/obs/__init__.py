@@ -1,26 +1,49 @@
 """repro.obs — unified observability: tracing, metrics, drift monitoring.
 
-Three pillars, one import surface:
+Five pillars, one import surface:
 
   * ``obs.trace`` — process-wide span tracer exporting Chrome-trace JSON
     (Perfetto-loadable); disabled by default via a free ``NullTracer``.
   * ``obs.metrics`` — counters/gauges/bounded-histograms registry unifying
-    the layers' ad-hoc stats behind one ``snapshot()``/``to_json()``.
+    the layers' ad-hoc stats behind one ``snapshot()``/``to_json()``, plus
+    declarative ``Objective`` SLOs evaluated against registry instruments.
   * ``obs.drift`` — sliding-window workload monitor emitting the
     ``DriftReport`` the hot-swap index tuner consumes.
+  * ``obs.profile`` — kernel-grained dispatch profiler attributing device
+    time to plan-derived bytes/FLOPs against ``launch.roofline`` hardware
+    terms; disabled by default via a free ``NullProfiler``.
+  * ``obs.flight`` — always-on bounded flight recorder dumping atomic
+    postmortem incident bundles when declarative trigger rules fire.
 
 This package is imported by hot serving paths — keep it stdlib-light at
 module level (numpy only); anything heavy (jax, the engine) loads lazily
 inside functions.
 """
 from .drift import DriftConfig, DriftMonitor, DriftReport
+from .flight import (
+    FlightRecorder,
+    FlightSample,
+    TriggerRule,
+    default_rules,
+    slo_rule,
+    validate_incident_bundle,
+)
 from .metrics import (
     Counter,
     Gauge,
     Histogram,
     MetricsRegistry,
+    Objective,
     get_registry,
     set_registry,
+)
+from .profile import (
+    KernelProfiler,
+    NullProfiler,
+    disable_profiler,
+    enable_profiler,
+    get_profiler,
+    set_profiler,
 )
 from .trace import (
     NullTracer,
@@ -29,6 +52,8 @@ from .trace import (
     enable,
     fence,
     get_tracer,
+    get_thread_name,
+    set_thread_name,
     set_tracer,
     validate_chrome_trace,
 )
@@ -37,18 +62,33 @@ __all__ = [
     "DriftConfig",
     "DriftMonitor",
     "DriftReport",
+    "FlightRecorder",
+    "FlightSample",
+    "TriggerRule",
+    "default_rules",
+    "slo_rule",
+    "validate_incident_bundle",
     "Counter",
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "Objective",
     "get_registry",
     "set_registry",
+    "KernelProfiler",
+    "NullProfiler",
+    "disable_profiler",
+    "enable_profiler",
+    "get_profiler",
+    "set_profiler",
     "NullTracer",
     "Tracer",
     "disable",
     "enable",
     "fence",
     "get_tracer",
+    "get_thread_name",
+    "set_thread_name",
     "set_tracer",
     "validate_chrome_trace",
 ]

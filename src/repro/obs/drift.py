@@ -270,6 +270,11 @@ class DriftMonitor:
             probed = self.live_recall(service, k=k)
             if probed is not None:
                 recall, rk, rn = probed
+                # publish so recall Objectives (obs.metrics) have a live
+                # instrument to watch between reports
+                from .metrics import get_registry
+
+                get_registry().gauge("service.live_recall").set(recall)
         return DriftReport(
             n_window=len(q),
             window_span_s=span,

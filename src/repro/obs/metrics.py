@@ -30,6 +30,7 @@ outside any registry lock so a slow source cannot stall recorders).
 from __future__ import annotations
 
 import bisect
+import dataclasses
 import json
 import math
 import threading
@@ -40,6 +41,7 @@ __all__ = [
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "Objective",
     "get_registry",
     "set_registry",
 ]
@@ -153,20 +155,48 @@ class Histogram:
             seen += c
         return self._max
 
+    def _snapshot_locked(self) -> Dict[str, float]:
+        if self._count == 0:
+            return {"count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0,
+                    "max": 0.0, "p50": 0.0, "p99": 0.0}
+        return {
+            "count": self._count,
+            "sum": self._sum,
+            "mean": self._sum / self._count,
+            "min": self._min,
+            "max": self._max,
+            "p50": self._percentile_locked(50.0),
+            "p99": self._percentile_locked(99.0),
+        }
+
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
-            if self._count == 0:
-                return {"count": 0, "sum": 0.0, "mean": 0.0, "min": 0.0,
-                        "max": 0.0, "p50": 0.0, "p99": 0.0}
-            return {
-                "count": self._count,
-                "sum": self._sum,
-                "mean": self._sum / self._count,
-                "min": self._min,
-                "max": self._max,
-                "p50": self._percentile_locked(50.0),
-                "p99": self._percentile_locked(99.0),
+            return self._snapshot_locked()
+
+    def to_json(self) -> Dict[str, Any]:
+        """Summary fields plus the real distribution.
+
+        ``buckets`` carries the occupied window of the bucket ladder:
+        ``le[j]`` is the inclusive upper boundary of bucket ``first + j``
+        (``None`` for the overflow bucket beyond the last bound) and
+        ``counts[j]`` its occupancy — enough for obsdump / flight bundles to
+        render the actual shape, not just interpolated p50/p99.
+        """
+        with self._lock:
+            snap = self._snapshot_locked()
+            counts = list(self._counts)
+        nz = [i for i, c in enumerate(counts) if c]
+        if nz:
+            lo, hi = nz[0], nz[-1]
+            snap["buckets"] = {
+                "first": lo,
+                "le": [self.bounds[i] if i < len(self.bounds) else None
+                       for i in range(lo, hi + 1)],
+                "counts": counts[lo:hi + 1],
             }
+        else:
+            snap["buckets"] = {"first": 0, "le": [], "counts": []}
+        return snap
 
 
 class MetricsRegistry:
@@ -207,12 +237,26 @@ class MetricsRegistry:
         with self._lock:
             self._sources.pop(name, None)
 
-    def snapshot(self) -> Dict[str, Any]:
-        """One consistent read of every instrument and attached source."""
+    def get(self, name: str) -> Optional[Any]:
+        """The instrument registered under ``name`` (None when absent) —
+        read-only lookups (e.g. ``Objective.evaluate``) must not create."""
+        with self._lock:
+            return self._metrics.get(name)
+
+    def snapshot(self, detail: bool = False) -> Dict[str, Any]:
+        """One consistent read of every instrument and attached source.
+
+        ``detail=True`` expands histograms via ``Histogram.to_json`` (bucket
+        boundaries + counts) — the form flight bundles persist.
+        """
         with self._lock:
             metrics = dict(self._metrics)
             sources = dict(self._sources)
-        out: Dict[str, Any] = {name: m.snapshot() for name, m in sorted(metrics.items())}
+        out: Dict[str, Any] = {
+            name: (m.to_json() if detail and isinstance(m, Histogram)
+                   else m.snapshot())
+            for name, m in sorted(metrics.items())
+        }
         for name, fn in sorted(sources.items()):
             try:
                 out[name] = fn()
@@ -220,8 +264,52 @@ class MetricsRegistry:
                 out[name] = {"error": repr(e)}
         return out
 
-    def to_json(self, indent: Optional[int] = None) -> str:
-        return json.dumps(self.snapshot(), indent=indent, default=_jsonable)
+    def to_json(self, indent: Optional[int] = None, detail: bool = False) -> str:
+        return json.dumps(self.snapshot(detail=detail), indent=indent,
+                          default=_jsonable)
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """Declarative SLO over one registry instrument.
+
+    ``metric`` names a registered instrument; for histograms ``stat`` picks
+    the snapshot statistic (``p50``/``p99``/``mean``/``max``/``min``), for
+    counters/gauges use ``stat="value"``. ``evaluate`` returns a human-
+    readable breach description when the objective is violated, else None —
+    the flight recorder's slo_burn rule dumps an incident on the None→breach
+    edge. ``min_count`` suppresses evaluation until a histogram has seen
+    enough samples (no breach on the first slow warmup call).
+    """
+
+    name: str
+    metric: str
+    stat: str = "p99"
+    max_value: Optional[float] = None
+    min_value: Optional[float] = None
+    min_count: int = 1
+
+    def evaluate(self, registry: Optional["MetricsRegistry"] = None) -> Optional[str]:
+        reg = get_registry() if registry is None else registry
+        inst = reg.get(self.metric)
+        if inst is None:
+            return None
+        if isinstance(inst, Histogram):
+            s = inst.snapshot()
+            if s["count"] < self.min_count:
+                return None
+            v = s.get(self.stat)
+            if v is None:
+                return None
+        else:
+            v = inst.value
+        if self.max_value is not None and v > self.max_value:
+            return (f"{self.name}: {self.metric}.{self.stat}={v:.6g} "
+                    f"> max {self.max_value:.6g}")
+        if self.min_value is not None and v < self.min_value:
+            return (f"{self.name}: {self.metric}.{self.stat}={v:.6g} "
+                    f"< min {self.min_value:.6g}")
+        return None
 
 
 def _jsonable(o: Any) -> Any:

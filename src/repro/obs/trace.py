@@ -37,8 +37,31 @@ __all__ = [
     "enable",
     "disable",
     "fence",
+    "set_thread_name",
+    "get_thread_name",
     "validate_chrome_trace",
 ]
+
+
+# ---------------------------------------------------------------------------
+# Thread labels: background loops (service scheduler, compactor, tuner,
+# flight recorder) call set_thread_name() once at the top of their loop; the
+# tracer stamps the label on every ROOT span that thread opens (nested spans
+# already carry a parent chain) and emits one Chrome "M" thread_name
+# metadata event per thread, so incident bundles can tell background work
+# from request work in Perfetto.
+# ---------------------------------------------------------------------------
+
+_THREAD_CTX = threading.local()
+
+
+def set_thread_name(name: Optional[str]) -> None:
+    """Label the calling thread's future root spans (None clears it)."""
+    _THREAD_CTX.name = None if name is None else str(name)
+
+
+def get_thread_name() -> Optional[str]:
+    return getattr(_THREAD_CTX, "name", None)
 
 
 class _NullSpan:
@@ -137,6 +160,7 @@ class Tracer:
         self._head = 0  # ring cursor once the buffer is full
         self._count = 0
         self._local = threading.local()
+        self._named_tids: set = set()  # tids with a thread_name "M" event
         # epoch for relative timestamps: the same perf_counter clock the
         # service uses, so add_span can take raw perf_counter floats
         self._t0_ns = time.perf_counter_ns()
@@ -170,11 +194,33 @@ class Tracer:
             "pid": 1,
             "tid": tid,
         }
+        meta = None
         if parent is not None:
             args = dict(args, parent=parent)
+        else:
+            label = getattr(_THREAD_CTX, "name", None)
+            if label is not None:
+                args = dict(args, thread=label)
+                if tid not in self._named_tids:
+                    meta = {
+                        "name": "thread_name",
+                        "ph": "M",
+                        "ts": 0.0,
+                        "pid": 1,
+                        "tid": tid,
+                        "args": {"name": label},
+                    }
         if args:
             ev["args"] = args
         with self._lock:
+            if meta is not None and tid not in self._named_tids:
+                self._named_tids.add(tid)
+                if len(self._events) < self.capacity:
+                    self._events.append(meta)
+                else:
+                    self._events[self._head] = meta
+                    self._head = (self._head + 1) % self.capacity
+                self._count += 1
             if len(self._events) < self.capacity:
                 self._events.append(ev)
             else:  # ring: overwrite the oldest slot
@@ -294,14 +340,25 @@ def disable() -> None:
     set_tracer(_NULL)
 
 
+# The KernelProfiler needs fenced dispatch timings even when no tracer is
+# installed (profiling without the trace ring): obs.profile sets this hold
+# on enable so fence() still blocks for real device time.
+_FENCE_HOLD = False
+
+
+def _set_fence_hold(on: bool) -> None:
+    global _FENCE_HOLD
+    _FENCE_HOLD = bool(on)
+
+
 def fence(*arrays):
-    """``jax.block_until_ready`` the values IFF tracing is enabled.
+    """``jax.block_until_ready`` the values IFF tracing/profiling is enabled.
 
     Dispatch sites call this inside their span so the recorded duration is
     real device time, not async-dispatch time; with the NullTracer installed
-    it is a no-op and the async pipeline is untouched.
+    (and no profiler) it is a no-op and the async pipeline is untouched.
     """
-    if _TRACER.enabled and arrays:
+    if (_TRACER.enabled or _FENCE_HOLD) and arrays:
         import jax
 
         jax.block_until_ready(arrays)

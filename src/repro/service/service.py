@@ -70,7 +70,7 @@ from ..fault.failpoints import failpoint
 from ..kernels import ops as kops
 from ..obs.drift import DriftConfig, DriftMonitor, DriftReport
 from ..obs.metrics import get_registry
-from ..obs.trace import fence, get_tracer
+from ..obs.trace import fence, get_tracer, set_thread_name
 from .delta import DeltaStore
 from .errors import (  # noqa: F401 — QueueFull re-exported for compatibility
     DeadlineExceeded,
@@ -1050,6 +1050,7 @@ class HQIService:
         self._stop_flag.clear()
 
         def loop() -> None:
+            set_thread_name("service")  # root spans tagged for trace triage
             while not self._stop_flag.is_set():
                 try:
                     n = self.tick()

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 from collections import deque
-from typing import Deque, Dict, Sequence
+from typing import Deque, Dict, List, Sequence
 
 
 @dataclasses.dataclass
@@ -131,6 +131,13 @@ class ServiceTelemetry:
             self._index_swaps += 1
 
     # --------------------------------------------------------------- reading
+
+    def recent_flushes(self, n: int = 32) -> List[Dict[str, float]]:
+        """The most recent flush records as dicts (oldest first) — the
+        flight recorder snapshots these into incident bundles."""
+        with self._lock:
+            tail = list(self._flushes)[-int(n):]
+        return [dataclasses.asdict(r) for r in tail]
 
     @staticmethod
     def _rank(lats, q: float) -> float:

@@ -29,7 +29,7 @@ from typing import List, Optional
 
 from ..fault.failpoints import failpoint
 from ..obs.metrics import get_registry
-from ..obs.trace import get_tracer
+from ..obs.trace import get_tracer, set_thread_name
 from ..service.service import HQIService
 from .snapshot import (
     build_state,
@@ -172,6 +172,7 @@ class Compactor:
         self._stop_flag.clear()
 
         def loop() -> None:
+            set_thread_name("compactor")  # root spans tagged for trace triage
             while not self._stop_flag.wait(self._backoff_s()):
                 try:
                     self.compact_once()

@@ -49,7 +49,7 @@ from ..core.workload import reconstruct_workload
 from ..fault.failpoints import failpoint
 from ..obs.drift import DriftReport
 from ..obs.metrics import get_registry
-from ..obs.trace import get_tracer
+from ..obs.trace import get_tracer, set_thread_name
 from ..service.service import HQIService
 from ..store.snapshot import (
     build_state,
@@ -448,6 +448,7 @@ class Tuner:
         self._stop_flag.clear()
 
         def loop() -> None:
+            set_thread_name("tuner")  # root spans tagged for trace triage
             while not self._stop_flag.wait(self._backoff_s()):
                 try:
                     self.tune_once()
